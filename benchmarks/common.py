@@ -1,0 +1,145 @@
+"""Shared benchmark substrate: a small trained reasoner + policy evals.
+
+``trained_reasoner()`` trains (once, then caches to experiments/) a
+small dense model on the synthetic arithmetic-CoT corpus until it can
+actually solve held-out problems under dense decoding — the accuracy
+benchmarks then measure how each sparsity policy degrades that ability
+as the cache budget shrinks, mirroring paper Fig. 6/8/9 mechanics.
+"""
+from __future__ import annotations
+
+import os
+import time
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import ckpt
+from repro.config import ModelConfig, RaasConfig, RunConfig
+from repro.data.pipeline import (DataConfig, batches, make_example,
+                                 prompt_of, specials, verify_answer)
+from repro.launch.train import make_train_step
+from repro.models import model as M
+from repro.optim import adamw
+
+CKPT_PATH = "experiments/bench_reasoner.msgpack"
+
+BENCH_MODEL = ModelConfig(
+    name="bench-reasoner", arch_type="dense", n_layers=4, d_model=128,
+    n_heads=4, n_kv_heads=2, d_ff=256, vocab_size=128, head_dim=32)
+
+BENCH_DATA = DataConfig(vocab_size=128, seq_len=192, chain_steps=24,
+                        modulus=97, seed=0)
+
+
+def trained_reasoner(steps: int = 600,
+                     force: bool = False) -> Tuple[dict, ModelConfig,
+                                                   DataConfig]:
+    cfg, dc = BENCH_MODEL, BENCH_DATA
+    params_like = jax.eval_shape(
+        lambda: M.init_params(jax.random.PRNGKey(0), cfg))
+    if os.path.exists(CKPT_PATH) and not force:
+        params = ckpt.restore(CKPT_PATH, {"params": params_like})["params"]
+        return params, cfg, dc
+    run = RunConfig(arch="bench", lr=3e-3, total_steps=steps,
+                    warmup_steps=30)
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    opt = adamw.init(params)
+    step = jax.jit(make_train_step(cfg, run))
+    it = batches(dc, 16)
+    t0 = time.time()
+    for i in range(steps):
+        b = next(it)
+        params, opt, m = step(params, opt,
+                              {"tokens": jnp.asarray(b["tokens"]),
+                               "loss_mask": jnp.asarray(b["loss_mask"])})
+        if i % 100 == 0:
+            print(f"  [reasoner] step {i} loss {float(m['loss']):.3f} "
+                  f"({time.time()-t0:.0f}s)", flush=True)
+    ckpt.save(CKPT_PATH, {"params": params})
+    return params, cfg, dc
+
+
+PROMPT_CAP = 16      # prompts are padded to this (fixed jit shapes)
+
+_JIT_CACHE: Dict = {}
+
+
+def _jitted_fns(cfg: ModelConfig, raas: RaasConfig):
+    """One (prefill, decode) jit pair per (cfg, raas) — prompts are
+    padded to PROMPT_CAP so shapes never vary across examples (keeps
+    the XLA CPU program count bounded)."""
+    key = (cfg, raas)
+    if key not in _JIT_CACHE:
+        pf = jax.jit(lambda p, c, t, l: M.prefill(p, cfg, t, l, c))
+        dc_ = jax.jit(lambda p, c, t, pos: M.decode_step(p, cfg, t, pos,
+                                                         c, raas))
+        _JIT_CACHE[key] = (pf, dc_)
+    return _JIT_CACHE[key]
+
+
+def greedy_decode_with_policy(params, cfg: ModelConfig, dc: DataConfig,
+                              raas: RaasConfig, index: int,
+                              max_new: int = 176,
+                              ) -> Tuple[np.ndarray, int, Dict]:
+    """Serve one problem under a policy.  Returns (decoded, n_steps,
+    stats dict with kv bytes + tokens cached)."""
+    sp = specials(dc)
+    prompt, plen = prompt_of(dc, index)
+    assert plen <= PROMPT_CAP
+    B = 1
+    max_seq = PROMPT_CAP + max_new + 1
+    cache = M.init_model_cache(cfg, raas, B, max_seq_len=max_seq,
+                               prefill_len=PROMPT_CAP)
+    kv_bytes = sum(c.attn.k_pages.nbytes + c.attn.v_pages.nbytes
+                   for c in cache.per_pos if c.attn is not None)
+    padded = np.zeros(PROMPT_CAP, np.int32)
+    padded[:plen] = prompt
+    prefill_fn, decode_fn = _jitted_fns(cfg, raas)
+    cache, logits = prefill_fn(params, cache,
+                               jnp.asarray(padded[None]),
+                               jnp.asarray([plen], jnp.int32))
+    out: List[int] = []
+    tok = int(jnp.argmax(logits[0]))
+    out.append(tok)
+    for t in range(plen, plen + max_new):
+        if tok == sp["EOS"]:
+            break
+        cache, logits = decode_fn(params, cache,
+                                  jnp.asarray([tok], jnp.int32),
+                                  jnp.asarray([t], jnp.int32))
+        tok = int(jnp.argmax(logits[0]))
+        out.append(tok)
+    stats = {"kv_bytes": kv_bytes,
+             "tokens_cached": int(cache.per_pos[0].attn.page_len.sum())
+             if cache.per_pos[0].attn is not None else 0}
+    return np.asarray(out), len(out), stats
+
+
+def accuracy_under_policy(params, cfg, dc, raas: RaasConfig,
+                          n_eval: int = 24, max_new: int = 176,
+                          start_index: int = 50_000) -> float:
+    """Exact-match accuracy on held-out problems under a policy."""
+    correct = 0
+    for i in range(n_eval):
+        dec, _, _ = greedy_decode_with_policy(params, cfg, dc, raas,
+                                              start_index + i, max_new)
+        correct += bool(verify_answer(dc, start_index + i, dec))
+    return correct / n_eval
+
+
+def reset_jit() -> None:
+    """Drop compiled programs between benchmark sections (the XLA CPU
+    JIT accumulates dylibs per program; hundreds in one process can
+    fail to materialize)."""
+    _JIT_CACHE.clear()
+    jax.clear_caches()
+
+
+def policy_cfg(policy: str, budget: int, page_size: int = 8,
+               **kw) -> RaasConfig:
+    return RaasConfig(policy=policy, budget_tokens=budget,
+                      page_size=page_size,
+                      quest_topk_pages=max(1, budget // page_size), **kw)

@@ -1,0 +1,111 @@
+"""Policy-fidelity metric: attention-mass recall vs dense (beyond-paper).
+
+For a teacher-forced trace of the trained reasoner, we replay the
+per-step (q, k, v) stream of one attention layer through each policy's
+cache and measure, at every step, how much of the *dense* attention
+probability mass lands on tokens the policy still retains.  This is
+the model-free quantity that explains the Fig. 6 accuracy ordering:
+RaaS/Quest keep recall ~1.0 because milestone pages stay resident
+exactly while they still receive mass; StreamingLLM/H2O drop milestone
+tokens and their recall collapses mid-chain.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import policy_cfg, trained_reasoner
+from repro.core import paged_cache as pc
+from repro.core import policies
+from repro.core.attention import decode_attend
+from repro.data.pipeline import make_example, prompt_of
+from repro.models import layers, model as M
+
+POLICIES = ["raas", "quest", "h2o", "streaming"]
+BUDGET = 48
+LAYER = 1          # representative mid-stack layer
+
+
+def _qkv_trace(params, cfg, tokens: np.ndarray):
+    """Teacher-forced q/k/v stream of one layer.  [T, H|KV, hd]."""
+    toks = jnp.asarray(tokens[None])
+    B, T = toks.shape
+    h = M._embed(params, cfg, toks, None)
+    positions = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32), (B, T))
+    # run the stack up to LAYER, then project qkv there
+    per_pos = params["blocks"][0]
+    from repro.models import blocks as BL
+    for li in range(LAYER):
+        bp = jax.tree.map(lambda x: x[li], per_pos)
+        h, _ = BL.block_train(bp, cfg, h, positions, "attn", "dense")
+    bp = jax.tree.map(lambda x: x[LAYER], per_pos)
+    hn = layers.rmsnorm(bp["norm_mixer"], h, cfg.norm_eps)
+    q, k, v = layers.qkv_project(bp["attn"], cfg, hn, positions)
+    return (np.asarray(q[0]), np.asarray(k[0]), np.asarray(v[0]))
+
+
+def _dense_probs(q_t, k_hist, scale):
+    """q_t [H, hd]; k_hist [t+1, KV, hd] -> prob mass per position."""
+    H, hd = q_t.shape
+    KV = k_hist.shape[1]
+    G = H // KV
+    qg = q_t.reshape(KV, G, hd)
+    logits = np.einsum("kgd,tkd->kgt", qg, k_hist) * scale
+    m = logits.max(-1, keepdims=True)
+    e = np.exp(logits - m)
+    p = e / e.sum(-1, keepdims=True)
+    return p.sum((0, 1)) / (KV * G)          # mean over heads, [t+1]
+
+
+def run(n_eval: int = 4, max_steps: int = 120) -> Dict:
+    params, cfg, dc = trained_reasoner()
+    scale = 1.0 / cfg.resolved_head_dim ** 0.5
+    rows = []
+    for policy in POLICIES:
+        raas = policy_cfg(policy, BUDGET)
+        recalls: List[float] = []
+        t0 = time.time()
+        for idx in range(n_eval):
+            toks, _, _ = make_example(dc, 70_000 + idx)
+            _, plen = prompt_of(dc, 70_000 + idx)
+            T = min(len(toks), plen + max_steps)
+            q_tr, k_tr, v_tr = _qkv_trace(params, cfg, toks[:T])
+            n_slots = policies.cache_slots(raas, T, plen)
+            spec = pc.CacheSpec(n_slots, raas.page_size, cfg.n_kv_heads,
+                                cfg.resolved_head_dim, jnp.float32)
+            cache = pc.init_cache(spec, 1)
+            cache = pc.ingest_prefill(
+                cache, jnp.asarray(k_tr[None, :plen]),
+                jnp.asarray(v_tr[None, :plen]),
+                jnp.asarray([plen]))
+            for t in range(plen, T):
+                cache, _, _ = decode_attend(
+                    cache, jnp.asarray(q_tr[None, t]),
+                    jnp.asarray(k_tr[None, t]),
+                    jnp.asarray(v_tr[None, t]), raas)
+                # retained token positions
+                pos = np.asarray(cache.page_pos[0])
+                ln = np.asarray(cache.page_len[0])
+                retained = np.concatenate(
+                    [np.arange(p, p + l) for p, l in zip(pos, ln)
+                     if l > 0]) if (ln > 0).any() else np.array([], int)
+                dense_p = _dense_probs(q_tr[t], k_tr[:t + 1], scale)
+                recalls.append(float(dense_p[retained[
+                    retained <= t]].sum()))
+        us = (time.time() - t0) / max(len(recalls), 1) * 1e6
+        mean_r = float(np.mean(recalls))
+        p10 = float(np.percentile(recalls, 10))
+        print(f"fidelity/{policy}-{BUDGET},{us:.0f},"
+              f"recall_mean={mean_r:.3f};recall_p10={p10:.3f}",
+              flush=True)
+        rows.append({"policy": policy, "recall_mean": mean_r,
+                     "recall_p10": p10})
+    return {"rows": rows}
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,42 @@
+"""Paper Fig. 6 proxy: accuracy vs cache budget, five policies.
+
+The paper's claim: RaaS and Quest reach Dense accuracy at moderate
+budgets, H2O and StreamingLLM collapse (milestone tokens discarded);
+at very small budgets RaaS underperforms (budget eaten by pinned
+prefill).  We reproduce the mechanism with the synthetic verifiable
+reasoner (see benchmarks/common.py) — exact-match accuracy on held-out
+problems under each policy x budget.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict
+
+from benchmarks.common import (accuracy_under_policy, policy_cfg,
+                               reset_jit, trained_reasoner)
+
+POLICIES = ["dense", "raas", "quest", "h2o", "streaming"]
+BUDGETS = [32, 48, 64, 96, 128]
+
+
+def run(n_eval: int = 16) -> Dict:
+    params, cfg, dc = trained_reasoner()
+    rows = []
+    for policy in POLICIES:
+        reset_jit()
+        for budget in BUDGETS:
+            if policy == "dense" and budget != BUDGETS[-1]:
+                continue  # dense has no budget knob
+            t0 = time.time()
+            raas = policy_cfg(policy, budget)
+            acc = accuracy_under_policy(params, cfg, dc, raas,
+                                        n_eval=n_eval)
+            dt = (time.time() - t0) / n_eval * 1e6
+            name = f"fig6/{policy}-{budget}"
+            print(f"{name},{dt:.0f},acc={acc:.3f}", flush=True)
+            rows.append({"policy": policy, "budget": budget, "acc": acc})
+    return {"rows": rows}
+
+
+if __name__ == "__main__":
+    run()

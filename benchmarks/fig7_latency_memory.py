@@ -1,0 +1,80 @@
+"""Paper Fig. 7 proxy: per-step latency and KV memory vs decode length.
+
+Claims reproduced:
+  * Dense decode step cost grows with N (O(N) per step, O(N^2) total);
+    RaaS/Quest per-step cost is O(L), flat in N.
+  * Dense and Quest KV memory grow linearly with N; RaaS plateaus at
+    the budget L.
+
+Latency here is measured wall-clock on CPU for the *attention step*
+shapes at growing cache sizes; memory is the exact static allocation
+of each policy's cache (which is the paper's point — it is static).
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import BENCH_MODEL, policy_cfg
+from repro.config import RaasConfig
+from repro.core import paged_cache as pc
+from repro.core import policies
+from repro.core.attention import decode_attend
+
+DECODE_LENS = [256, 512, 1024, 2048, 4096, 8192]
+BUDGET = 512
+
+
+def _bench_step(policy: str, n_ctx: int, iters: int = 20) -> Dict:
+    cfg = BENCH_MODEL
+    raas = policy_cfg(policy, BUDGET, page_size=16)
+    n_slots = policies.cache_slots(raas, n_ctx + iters + 1, 64)
+    spec = pc.CacheSpec(n_slots, raas.page_size, cfg.n_kv_heads,
+                        cfg.resolved_head_dim, jnp.float32)
+    cache = pc.init_cache(spec, 1)
+    rng = np.random.default_rng(0)
+    KV, hd, H = cfg.n_kv_heads, cfg.resolved_head_dim, cfg.n_heads
+    # simulate a cache that has already absorbed n_ctx decode tokens
+    k = jnp.asarray(rng.standard_normal((1, min(n_ctx, 64), KV, hd)),
+                    jnp.float32)
+    cache = pc.ingest_prefill(cache, k, k,
+                              jnp.asarray([min(n_ctx, 64)]))
+    step = jax.jit(lambda c, q, kn, vn: decode_attend(c, q, kn, vn, raas))
+    q = jnp.asarray(rng.standard_normal((1, H, hd)), jnp.float32)
+    kn = jnp.asarray(rng.standard_normal((1, KV, hd)), jnp.float32)
+    # fill to n_ctx
+    for _ in range(min(n_ctx, n_slots * raas.page_size // 2)):
+        cache, _, _ = step(cache, q, kn, kn)
+    jax.block_until_ready(cache.k_pages)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        cache, ctx, _ = step(cache, q, kn, kn)
+    jax.block_until_ready(ctx)
+    us = (time.perf_counter() - t0) / iters * 1e6
+    kv_bytes = cache.k_pages.nbytes + cache.v_pages.nbytes
+    return {"us_per_step": us, "kv_bytes": kv_bytes}
+
+
+def run() -> Dict:
+    rows = []
+    for policy in ["dense", "quest", "raas"]:
+        for n in DECODE_LENS:
+            r = _bench_step(policy, n)
+            name = f"fig7/{policy}-ctx{n}"
+            print(f"{name},{r['us_per_step']:.0f},"
+                  f"kv_mb={r['kv_bytes']/1e6:.2f}", flush=True)
+            rows.append({"policy": policy, "ctx": n, **r})
+    # the paper's claims, asserted:
+    raas_mem = [r["kv_bytes"] for r in rows if r["policy"] == "raas"]
+    dense_mem = [r["kv_bytes"] for r in rows if r["policy"] == "dense"]
+    assert raas_mem[-1] == raas_mem[2], "RaaS memory must plateau"
+    assert dense_mem[-1] > 4 * dense_mem[0], "Dense memory must grow"
+    return {"rows": rows}
+
+
+if __name__ == "__main__":
+    run()

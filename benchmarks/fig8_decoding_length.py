@@ -1,0 +1,61 @@
+"""Paper Fig. 8 proxy: decoding lengths under each policy.
+
+The paper shows that discarding milestone tokens (H2O/StreamingLLM at
+tight budgets) makes the model lose the reasoning thread and decode
+until the length limit, while Dense/Quest/RaaS terminate normally.  We
+measure emitted tokens until EOS (capped) per policy on the trained
+synthetic reasoner.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict
+
+import numpy as np
+
+from benchmarks.common import (greedy_decode_with_policy, policy_cfg,
+                               trained_reasoner)
+from repro.data.pipeline import make_example, specials
+
+POLICIES = ["dense", "raas", "quest", "h2o", "streaming"]
+BUDGET = 48          # tight: pressure on milestone retention
+MAX_NEW = 176
+
+
+def _len_to_answer(dc, index: int, decoded: np.ndarray) -> int:
+    """Tokens emitted until the first correct `A <gold>` pair; MAX_NEW
+    if the model never states the right answer (lost the thread and
+    re-reasons forever — the paper's Fig. 8 pathology)."""
+    _, _, gold = make_example(dc, index)
+    sp = specials(dc)
+    d = np.asarray(decoded).ravel()
+    for j in range(len(d) - 1):
+        if d[j] == sp["A"] and d[j + 1] == gold:
+            return j + 2
+    return MAX_NEW
+
+
+def run(n_eval: int = 12) -> Dict:
+    params, cfg, dc = trained_reasoner()
+    rows = []
+    for policy in POLICIES:
+        raas = policy_cfg(policy, BUDGET)
+        lens = []
+        t0 = time.time()
+        for i in range(n_eval):
+            dec, _, _ = greedy_decode_with_policy(
+                params, cfg, dc, raas, 60_000 + i, max_new=MAX_NEW)
+            lens.append(_len_to_answer(dc, 60_000 + i, dec))
+        us = (time.time() - t0) / n_eval * 1e6
+        mean_len = float(np.mean(lens))
+        hit_cap = float(np.mean([l >= MAX_NEW for l in lens]))
+        name = f"fig8/{policy}-{BUDGET}"
+        print(f"{name},{us:.0f},mean_len_to_answer={mean_len:.1f};"
+              f"never_answered={hit_cap:.2f}", flush=True)
+        rows.append({"policy": policy, "mean_len": mean_len,
+                     "hit_cap": hit_cap})
+    return {"rows": rows}
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,45 @@
+"""Paper Fig. 9 proxy: RaaS accuracy vs alpha (and the top-r rule).
+
+Small alpha -> every page keeps refreshing -> degenerates to FIFO;
+large alpha -> nothing refreshes -> milestone pages die early.  The
+paper recommends alpha ~ 1e-4, equivalently top-r 50%.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict
+
+from benchmarks.common import (accuracy_under_policy, policy_cfg,
+                               trained_reasoner)
+
+ALPHAS = [1e-6, 1e-4, 1e-2, 1e-1]
+BUDGETS = [48, 96]
+
+
+def run(n_eval: int = 12) -> Dict:
+    params, cfg, dc = trained_reasoner()
+    rows = []
+    for budget in BUDGETS:
+        for alpha in ALPHAS:
+            raas = policy_cfg("raas", budget, alpha=alpha,
+                              use_top_r=False)
+            t0 = time.time()
+            acc = accuracy_under_policy(params, cfg, dc, raas,
+                                        n_eval=n_eval)
+            us = (time.time() - t0) / n_eval * 1e6
+            name = f"fig9/alpha{alpha:g}-b{budget}"
+            print(f"{name},{us:.0f},acc={acc:.3f}", flush=True)
+            rows.append({"alpha": alpha, "budget": budget, "acc": acc})
+        # the paper's top-r=50% rule as comparison
+        raas = policy_cfg("raas", budget, use_top_r=True, top_r=0.5)
+        t0 = time.time()
+        acc = accuracy_under_policy(params, cfg, dc, raas, n_eval=n_eval)
+        us = (time.time() - t0) / n_eval * 1e6
+        print(f"fig9/top_r50-b{budget},{us:.0f},acc={acc:.3f}",
+              flush=True)
+        rows.append({"alpha": "top_r", "budget": budget, "acc": acc})
+    return {"rows": rows}
+
+
+if __name__ == "__main__":
+    run()

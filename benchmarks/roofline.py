@@ -1,0 +1,75 @@
+"""Roofline table: aggregate the dry-run artifacts (deliverable g).
+
+Reads experiments/dryrun/*.json (produced by repro.launch.dryrun_all),
+computes the three roofline terms, MODEL_FLOPS (6*N*D for dense /
+6*N_active*D for MoE), the useful-compute ratio, and prints the
+per-(arch x shape) table consumed by EXPERIMENTS.md §Roofline.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List
+
+from repro.config import INPUT_SHAPES, get_config
+
+DRYRUN_DIR = "experiments/dryrun"
+
+
+def model_flops(arch: str, shape: str) -> float:
+    """6*N_active*D for train (fwd+bwd); 2*N_active*D per decoded token."""
+    cfg = get_config(arch)
+    seq, batch, kind = INPUT_SHAPES[shape]
+    n_active = cfg.n_active_params()
+    if kind == "train":
+        tokens = seq * batch
+        return 6.0 * n_active * tokens
+    if kind == "prefill":
+        tokens = seq * batch
+        return 2.0 * n_active * tokens
+    return 2.0 * n_active * batch        # one token per sequence
+
+
+def load_records(mesh: str = "16x16") -> List[Dict]:
+    recs = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        with open(path) as f:
+            r = json.load(f)
+        if r.get("status") == "ok" and r.get("mesh") == mesh:
+            recs.append(r)
+    return recs
+
+
+def run() -> Dict:
+    recs = load_records()
+    if not recs:
+        print("roofline/no-dryrun-artifacts,0,run repro.launch.dryrun_all")
+        return {"rows": []}
+    rows = []
+    for r in recs:
+        arch, shape = r["arch"], r["shape"]
+        if r.get("policy") in ("dense", "quest") and shape == "decode_32k":
+            tag = f"{arch}_{shape}_{r['policy']}"
+        else:
+            tag = f"{arch}_{shape}"
+        mf = model_flops(arch, shape)
+        dev = r["devices"]
+        hlo_f = r["flops_per_device"] * dev
+        ratio = mf / hlo_f if hlo_f else 0.0
+        t = r["roofline"]
+        total = max(t["compute_s"], t["memory_s"], t["collective_s"])
+        print(f"roofline/{tag},{total*1e6:.1f},"
+              f"compute_s={t['compute_s']:.3e};"
+              f"memory_s={t['memory_s']:.3e};"
+              f"collective_s={t['collective_s']:.3e};"
+              f"dominant={r['dominant']};useful_ratio={ratio:.2f}",
+              flush=True)
+        rows.append({"tag": tag, **t, "dominant": r["dominant"],
+                     "model_flops": mf, "hlo_flops": hlo_f,
+                     "useful_ratio": ratio})
+    return {"rows": rows}
+
+
+if __name__ == "__main__":
+    run()

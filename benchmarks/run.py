@@ -1,0 +1,56 @@
+"""Benchmark harness: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV lines.  Figures:
+  fig6 — accuracy vs cache budget (5 policies)       [paper Fig. 6]
+  fig7 — latency/memory vs decode length             [paper Fig. 7]
+  fig8 — decoding lengths under tight budgets        [paper Fig. 8]
+  fig9 — RaaS alpha sweep                            [paper Fig. 9]
+  roofline — dry-run roofline terms per arch x shape [deliverable g]
+
+``--quick`` trims eval counts for CI-speed runs.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main(argv=None) -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("--only", default="",
+                   help="comma list: fig6,fig7,fig8,fig9,roofline")
+    p.add_argument("--quick", action="store_true")
+    args = p.parse_args(argv)
+    want = set(args.only.split(",")) if args.only else {
+        "fig6", "fig7", "fig8", "fig9", "fidelity", "roofline"}
+
+    n6 = 6 if args.quick else 16
+    n8 = 4 if args.quick else 12
+    n9 = 4 if args.quick else 12
+
+    print("name,us_per_call,derived")
+    t0 = time.time()
+    if "fig7" in want:
+        from benchmarks import fig7_latency_memory
+        fig7_latency_memory.run()
+    if "fig6" in want:
+        from benchmarks import fig6_accuracy
+        fig6_accuracy.run(n_eval=n6)
+    if "fig8" in want:
+        from benchmarks import fig8_decoding_length
+        fig8_decoding_length.run(n_eval=n8)
+    if "fig9" in want:
+        from benchmarks import fig9_alpha
+        fig9_alpha.run(n_eval=n9)
+    if "fidelity" in want:
+        from benchmarks import fidelity
+        fidelity.run(n_eval=2 if args.quick else 4)
+    if "roofline" in want:
+        from benchmarks import roofline
+        roofline.run()
+    print(f"total,{(time.time()-t0)*1e6:.0f},done", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

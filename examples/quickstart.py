@@ -1,0 +1,50 @@
+"""Quickstart: the RaaS algorithm in 60 lines.
+
+Builds a small GQA transformer, prefill a short "question", decodes a
+long "chain of thought" under the paper's RaaS policy, and shows the
+O(L) memory property: the KV cache never grows past the budget while
+dense decoding would keep every token.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig, RaasConfig
+from repro.models import model as M
+
+cfg = ModelConfig(name="quickstart", arch_type="dense", n_layers=4,
+                  d_model=128, n_heads=8, n_kv_heads=2, d_ff=256,
+                  vocab_size=512, head_dim=16, qk_norm=True)
+params = M.init_params(jax.random.PRNGKey(0), cfg)
+
+B, prefill_len, decode_len = 1, 24, 200
+prompt = jax.random.randint(jax.random.PRNGKey(1), (B, prefill_len), 0,
+                            cfg.vocab_size)
+
+for policy, budget in [("dense", 0), ("raas", 128)]:
+    raas = RaasConfig(policy=policy, budget_tokens=max(budget, 128),
+                      page_size=16)
+    max_seq = prefill_len + decode_len + 1
+    cache = M.init_model_cache(cfg, raas, B, max_seq_len=max_seq,
+                               prefill_len=prefill_len)
+    kv_mb = sum(c.attn.k_pages.nbytes + c.attn.v_pages.nbytes
+                for c in cache.per_pos) / 1e6
+
+    cache, logits = M.prefill(params, cfg, prompt,
+                              jnp.full((B,), prefill_len), cache)
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    step = jax.jit(lambda c, t, p: M.decode_step(params, cfg, t, p, c,
+                                                 raas))
+    for t in range(prefill_len, prefill_len + decode_len):
+        cache, logits = step(cache, tok, jnp.full((B,), t, jnp.int32))
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+
+    cached = int(cache.per_pos[0].attn.page_len[:, 0].sum())
+    print(f"{policy:8s} | KV allocation {kv_mb:8.2f} MB | "
+          f"tokens resident after {decode_len} decodes: "
+          f"{int(cache.per_pos[0].attn.page_len.sum())} "
+          f"(budget={raas.budget_tokens if policy != 'dense' else 'n/a'})")
+
+print("\nRaaS holds memory at O(L) while dense grows O(N) — "
+      "same decode loop, one config flag.")

@@ -1,0 +1,73 @@
+"""Serving example: batched requests under all five sparsity policies.
+
+Shows the paper's "impossible trinity" table live: per-policy JCT,
+decode throughput, KV memory, and (with a trained checkpoint) accuracy
+on verifiable problems.
+
+Run:  PYTHONPATH=src python examples/serve_raas.py
+      (add --ckpt experiments/reasoner-100m/300.msgpack after running
+       examples/train_reasoner.py for meaningful accuracy numbers)
+"""
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.checkpoint import ckpt
+from repro.config import ModelConfig, RaasConfig
+from repro.data.pipeline import DataConfig, prompt_of, specials, verify_answer
+from repro.models import model as M
+from repro.serving.engine import Engine, Request
+from repro.serving.scheduler import serve
+
+
+def main() -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("--ckpt", default="")
+    p.add_argument("--budget", type=int, default=96)
+    p.add_argument("--requests", type=int, default=8)
+    args = p.parse_args()
+
+    cfg = ModelConfig(name="reasoner-100m", arch_type="dense",
+                      n_layers=12, d_model=768, n_heads=12, n_kv_heads=4,
+                      d_ff=2048, vocab_size=512, head_dim=64) \
+        if args.ckpt else \
+        ModelConfig(name="serve-demo", arch_type="dense", n_layers=4,
+                    d_model=128, n_heads=4, n_kv_heads=2, d_ff=256,
+                    vocab_size=512, head_dim=32)
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    if args.ckpt:
+        like = jax.eval_shape(lambda: {"params": params})
+        params = ckpt.restore(args.ckpt, like)["params"]
+
+    dc = DataConfig(vocab_size=cfg.vocab_size, seq_len=192,
+                    chain_steps=24)
+    sp = specials(dc)
+
+    print(f"{'policy':10s} {'JCT(s)':>8s} {'tok/s':>8s} "
+          f"{'kv(MB)':>8s} {'acc':>5s}")
+    for policy in ["dense", "quest", "raas", "h2o", "streaming"]:
+        raas = RaasConfig(policy=policy, budget_tokens=args.budget,
+                          page_size=8,
+                          quest_topk_pages=args.budget // 8)
+        eng = Engine(params, cfg, raas, batch_slots=4, max_seq=224,
+                     max_prefill=16)
+        reqs = []
+        for i in range(args.requests):
+            prompt, _ = prompt_of(dc, 90_000 + i)
+            reqs.append(Request(uid=i, prompt=prompt,
+                                max_new_tokens=180, eos_id=sp["EOS"]))
+        t0 = time.time()
+        done = serve(eng, reqs)
+        jct = time.time() - t0
+        toks = sum(len(r.output) for r in done)
+        acc = np.mean([verify_answer(dc, 90_000 + r.uid,
+                                     np.asarray(r.output))
+                       for r in done])
+        print(f"{policy:10s} {jct:8.2f} {toks/jct:8.1f} "
+              f"{eng.kv_cache_bytes()/1e6:8.2f} {acc:5.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,14 @@
+"""repro — RaaS (ACL 2025 Findings) reproduction framework.
+
+The paper's contribution lives in ``repro.core`` (paged KV cache +
+sparsity policies + policy-aware decode attention); ``repro.models``
+is the 10-architecture zoo, ``repro.launch`` the multi-pod
+distribution layer.  See README.md / DESIGN.md.
+"""
+from repro.config import (ModelConfig, MoEConfig, MambaConfig,
+                          RaasConfig, RunConfig, get_config, list_archs)
+
+__all__ = [
+    "ModelConfig", "MoEConfig", "MambaConfig", "RaasConfig",
+    "RunConfig", "get_config", "list_archs",
+]

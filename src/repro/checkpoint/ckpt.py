@@ -1,0 +1,87 @@
+"""Msgpack pytree checkpointing with host-gather for sharded arrays.
+
+Layout: one ``<step>.msgpack`` per save; arrays are stored as
+``{dtype, shape, raw bytes}``; the pytree structure is recovered from
+jax.tree flatten-with-path keys so restore works without the original
+object graph.  Sharded arrays are gathered to host before writing and
+re-sharded on restore via ``jax.device_put(x, sharding)`` when a
+sharding tree is provided.
+"""
+from __future__ import annotations
+
+import os
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+
+def _key_str(path) -> str:
+    out = []
+    for p in path:
+        if hasattr(p, "key"):
+            out.append(str(p.key))
+        elif hasattr(p, "idx"):
+            out.append(str(p.idx))
+        elif hasattr(p, "name"):
+            out.append(str(p.name))
+        else:
+            out.append(str(p))
+    return "/".join(out)
+
+
+def _encode(x: np.ndarray) -> dict:
+    x = np.asarray(x)
+    return {"dtype": x.dtype.str, "shape": list(x.shape),
+            "data": x.tobytes()}
+
+
+def _decode(d: dict) -> np.ndarray:
+    return np.frombuffer(d["data"], dtype=np.dtype(d["dtype"])).reshape(
+        d["shape"]).copy()
+
+
+def save(path: str, tree: Any) -> None:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    payload = {}
+    for p, leaf in flat:
+        arr = np.asarray(jax.device_get(leaf))
+        payload[_key_str(p)] = _encode(arr)
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        f.write(msgpack.packb(payload, use_bin_type=True))
+    os.replace(tmp, path)
+
+
+def restore(path: str, like: Any, shardings: Optional[Any] = None) -> Any:
+    """Restore into the structure of ``like`` (shape/dtype template)."""
+    with open(path, "rb") as f:
+        payload = msgpack.unpackb(f.read(), raw=False)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(like)
+    shard_leaves = (jax.tree.leaves(shardings)
+                    if shardings is not None else [None] * len(flat))
+    out = []
+    for (p, leaf), shd in zip(flat, shard_leaves):
+        key = _key_str(p)
+        if key not in payload:
+            raise KeyError(f"checkpoint missing leaf {key}")
+        arr = _decode(payload[key]).astype(leaf.dtype)
+        if arr.shape != tuple(leaf.shape):
+            raise ValueError(f"shape mismatch for {key}: "
+                             f"{arr.shape} vs {leaf.shape}")
+        x = jnp.asarray(arr)
+        if shd is not None:
+            x = jax.device_put(x, shd)
+        out.append(x)
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [int(f.split(".")[0]) for f in os.listdir(ckpt_dir)
+             if f.endswith(".msgpack") and f.split(".")[0].isdigit()]
+    return max(steps) if steps else None

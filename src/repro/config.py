@@ -1,0 +1,330 @@
+"""Config system for the RaaS reproduction framework.
+
+Everything in the framework hangs off three frozen dataclasses:
+
+* :class:`ModelConfig`   — architecture definition (one per assigned arch).
+* :class:`RaasConfig`    — the paper's KV-sparsity policy knobs.
+* :class:`RunConfig`     — training / serving / dry-run run parameters.
+
+Configs are plain frozen dataclasses (hashable, usable as jit static
+args).  ``src/repro/configs/<arch>.py`` modules each expose ``CONFIG``;
+:func:`get_config` resolves an ``--arch`` id to its ModelConfig.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from dataclasses import dataclass, field
+from typing import Any, Optional, Tuple
+
+# ---------------------------------------------------------------------------
+# Layer-kind vocabulary used by the hybrid stacking machinery.
+# ---------------------------------------------------------------------------
+ATTN = "attn"
+MAMBA = "mamba"
+
+FFN_DENSE = "dense"
+FFN_MOE = "moe"
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    """Mixture-of-experts FFN configuration."""
+
+    n_experts: int
+    top_k: int
+    d_ff: int                      # per-expert hidden width
+    router_jitter: float = 0.0     # train-time router noise
+    load_balance_coef: float = 0.01
+    capacity_factor: float = 0.0   # 0.0 = dropless dense-dispatch
+    # optional sharding constraint (axis names) for the [E, C, D]
+    # dispatch buffer — the expert-parallel perf lever (§Perf): without
+    # it GSPMD tends to replicate the buffer and all-reduce the
+    # scatter; with ("model", "data", None) the scatter lowers to the
+    # expert all-to-all.  None = let the partitioner decide (baseline).
+    dispatch_axes: Optional[Tuple[Optional[str], ...]] = None
+
+
+@dataclass(frozen=True)
+class MambaConfig:
+    """Mamba2 / SSD mixer configuration."""
+
+    d_state: int = 128
+    d_conv: int = 4
+    expand: int = 2
+    head_dim: int = 64
+    chunk_size: int = 256          # SSD chunk length for the parallel scan
+
+    def d_inner(self, d_model: int) -> int:
+        return self.expand * d_model
+
+    def n_heads(self, d_model: int) -> int:
+        return self.d_inner(d_model) // self.head_dim
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """Architecture definition.
+
+    ``period`` describes one repeating block of layers as a tuple of
+    (mixer_kind, ffn_kind) pairs; the full stack is ``period`` repeated
+    ``n_periods`` times, ``n_layers == n_periods * len(period)``.
+    Uniform architectures use a length-1 period.
+    """
+
+    name: str
+    arch_type: str                # dense | moe | ssm | hybrid | vlm | audio
+    n_layers: int
+    d_model: int
+    n_heads: int                  # query heads (0 for attention-free)
+    n_kv_heads: int
+    d_ff: int                     # dense-FFN hidden width (0 if all-MoE/ssm)
+    vocab_size: int
+    head_dim: int = 0             # 0 -> d_model // n_heads
+    qk_norm: bool = False
+    rope_theta: float = 1e6
+    norm_eps: float = 1e-6
+    tie_embeddings: bool = False
+    # hybrid stacking ------------------------------------------------------
+    period: Tuple[Tuple[str, str], ...] = ((ATTN, FFN_DENSE),)
+    # sub-configs ----------------------------------------------------------
+    moe: Optional[MoEConfig] = None
+    mamba: Optional[MambaConfig] = None
+    # modality frontends (stubs per the assignment carve-out) --------------
+    frontend: Optional[str] = None   # "siglip_stub" | "encodec_stub"
+    n_prefix_tokens: int = 0         # precomputed patch/frame embeddings
+    n_codebooks: int = 1             # musicgen-style multi-codebook audio
+    # provenance
+    source: str = ""
+
+    # -- derived -----------------------------------------------------------
+    def __post_init__(self) -> None:
+        if self.n_layers % len(self.period) != 0:
+            raise ValueError(
+                f"{self.name}: n_layers={self.n_layers} not divisible by "
+                f"period length {len(self.period)}"
+            )
+        for mixer, ffn in self.period:
+            if mixer not in (ATTN, MAMBA):
+                raise ValueError(f"unknown mixer kind {mixer!r}")
+            if ffn not in (FFN_DENSE, FFN_MOE, "none"):
+                raise ValueError(f"unknown ffn kind {ffn!r}")
+            if mixer == MAMBA and self.mamba is None:
+                raise ValueError(f"{self.name}: mamba layer without MambaConfig")
+            if ffn == FFN_MOE and self.moe is None:
+                raise ValueError(f"{self.name}: moe layer without MoEConfig")
+
+    @property
+    def n_periods(self) -> int:
+        return self.n_layers // len(self.period)
+
+    @property
+    def resolved_head_dim(self) -> int:
+        if self.head_dim:
+            return self.head_dim
+        if self.n_heads == 0:
+            return 0
+        return self.d_model // self.n_heads
+
+    @property
+    def has_attention(self) -> bool:
+        return any(m == ATTN for m, _ in self.period)
+
+    @property
+    def attn_free(self) -> bool:
+        return not self.has_attention
+
+    def n_params(self) -> int:
+        """Approximate parameter count (embedding + blocks)."""
+        p = self.vocab_size * self.d_model * self.n_codebooks
+        if not self.tie_embeddings:
+            p += self.vocab_size * self.d_model * self.n_codebooks
+        hd = self.resolved_head_dim
+        for mixer, ffn in self.period:
+            n = self.n_periods
+            if mixer == ATTN:
+                qkv = self.d_model * hd * (self.n_heads + 2 * self.n_kv_heads)
+                o = self.n_heads * hd * self.d_model
+                p += n * (qkv + o)
+            else:
+                mc = self.mamba
+                d_in = mc.d_inner(self.d_model)
+                nh = mc.n_heads(self.d_model)
+                in_proj = self.d_model * (2 * d_in + 2 * mc.d_state + nh)
+                p += n * (in_proj + d_in * self.d_model
+                          + mc.d_conv * (d_in + 2 * mc.d_state))
+            if ffn == FFN_DENSE:
+                p += n * 3 * self.d_model * self.d_ff
+            elif ffn == FFN_MOE:
+                p += n * (3 * self.d_model * self.moe.d_ff * self.moe.n_experts
+                          + self.d_model * self.moe.n_experts)
+            p += n * 2 * self.d_model  # norms
+        return p
+
+    def n_active_params(self) -> int:
+        """Active parameters per token (MoE: top_k experts only)."""
+        if self.moe is None:
+            return self.n_params()
+        full = self.n_params()
+        moe_layers = sum(1 for _, f in self.period if f == FFN_MOE) * self.n_periods
+        all_experts = moe_layers * 3 * self.d_model * self.moe.d_ff * self.moe.n_experts
+        active = moe_layers * 3 * self.d_model * self.moe.d_ff * self.moe.top_k
+        return full - all_experts + active
+
+    def reduced(self, n_layers: int = 2, d_model: int = 256,
+                n_experts: int = 4, vocab: int = 512) -> "ModelConfig":
+        """Smoke-test variant of the same family (per assignment spec)."""
+        d_model = min(d_model, 512)
+        period = self.period
+        n_layers = max(n_layers, len(period))
+        n_layers -= n_layers % len(period)
+        hd = 64
+        n_heads = max(1, d_model // hd) if self.n_heads else 0
+        n_kv = max(1, min(self.n_kv_heads, n_heads)) if self.n_heads else 0
+        if n_heads and n_heads % n_kv:
+            n_kv = 1
+        moe = None
+        if self.moe is not None:
+            moe = dataclasses.replace(
+                self.moe, n_experts=min(n_experts, self.moe.n_experts),
+                top_k=min(self.moe.top_k, min(n_experts, self.moe.n_experts)),
+                d_ff=min(self.moe.d_ff, 2 * d_model))
+        mamba = None
+        if self.mamba is not None:
+            mamba = dataclasses.replace(
+                self.mamba, d_state=min(self.mamba.d_state, 32),
+                head_dim=32, chunk_size=32)
+        return dataclasses.replace(
+            self, name=self.name + "-reduced", n_layers=n_layers,
+            d_model=d_model, n_heads=n_heads, n_kv_heads=n_kv,
+            d_ff=min(self.d_ff, 2 * d_model) if self.d_ff else 0,
+            vocab_size=min(vocab, self.vocab_size), head_dim=hd if n_heads else 0,
+            moe=moe, mamba=mamba,
+            n_prefix_tokens=min(self.n_prefix_tokens, 8),
+        )
+
+
+# ---------------------------------------------------------------------------
+# RaaS / sparsity-policy config (the paper's contribution).
+# ---------------------------------------------------------------------------
+POLICIES = ("dense", "raas", "quest", "h2o", "streaming", "quest_raas")
+
+
+@dataclass(frozen=True)
+class RaasConfig:
+    """KV-cache sparsity policy configuration (paper §3).
+
+    ``budget_tokens`` is L — the decode-token cache budget.  Prefill
+    pages are pinned *in addition* to the budget (paper keeps all
+    prefill KV).  ``alpha`` is the post-softmax page-probability
+    threshold for timestamp refresh; ``top_r`` is the equivalent
+    fraction rule (paper recommends r=50%; "two sides of the same
+    coin").  ``use_top_r`` selects which is applied.
+    """
+
+    policy: str = "raas"
+    budget_tokens: int = 1024
+    page_size: int = 16
+    alpha: float = 1e-4
+    top_r: float = 0.5
+    use_top_r: bool = True
+    # Quest: number of pages attended per step (top-k pages by score).
+    quest_topk_pages: int = 64
+    # StreamingLLM: sink tokens (prefill is pinned anyway; extra sinks
+    # for the no-prefill corner).
+    sink_tokens: int = 4
+    # H2O: recent-window tokens always kept.
+    h2o_recent: int = 128
+    # representative-key scheme: "quest_minmax" (paper-faithful) or
+    # "mean" (beyond-paper cheaper variant).
+    rep_scheme: str = "quest_minmax"
+    # quest_raas hybrid (the paper's own recommendation for long-prefill
+    # workloads, recommended in §4.2/Limitations but not implemented
+    # there): Quest top-k selection over the prefill pages, RaaS
+    # timestamp eviction over decode pages.  Requires the static
+    # prefill page count at trace time.
+    prefill_pages_hint: int = 0
+
+    def __post_init__(self) -> None:
+        if self.policy not in POLICIES:
+            raise ValueError(f"policy must be one of {POLICIES}")
+        if self.budget_tokens % self.page_size:
+            raise ValueError("budget_tokens must be a multiple of page_size")
+
+    @property
+    def budget_pages(self) -> int:
+        return self.budget_tokens // self.page_size
+
+
+# ---------------------------------------------------------------------------
+# Run config: shapes, meshes, dtypes.
+# ---------------------------------------------------------------------------
+INPUT_SHAPES = {
+    # name: (seq_len, global_batch, kind)
+    "train_4k": (4_096, 256, "train"),
+    "prefill_32k": (32_768, 32, "prefill"),
+    "decode_32k": (32_768, 128, "decode"),
+    "long_500k": (524_288, 1, "decode"),
+}
+
+
+@dataclass(frozen=True)
+class RunConfig:
+    arch: str = "smollm-360m"
+    shape: str = "train_4k"
+    # dtypes
+    param_dtype: str = "bfloat16"
+    compute_dtype: str = "bfloat16"
+    # training
+    lr: float = 3e-4
+    weight_decay: float = 0.1
+    warmup_steps: int = 100
+    total_steps: int = 1000
+    clip_norm: float = 1.0
+    remat: bool = True
+    seed: int = 0
+    # serving / sparsity
+    raas: RaasConfig = field(default_factory=RaasConfig)
+
+    @property
+    def seq_len(self) -> int:
+        return INPUT_SHAPES[self.shape][0]
+
+    @property
+    def global_batch(self) -> int:
+        return INPUT_SHAPES[self.shape][1]
+
+    @property
+    def kind(self) -> str:
+        return INPUT_SHAPES[self.shape][2]
+
+
+# ---------------------------------------------------------------------------
+# Registry.
+# ---------------------------------------------------------------------------
+ARCH_IDS = (
+    "qwen3-8b",
+    "paligemma-3b",
+    "yi-34b",
+    "internlm2-20b",
+    "jamba-1.5-large-398b",
+    "olmoe-1b-7b",
+    "mamba2-780m",
+    "musicgen-medium",
+    "kimi-k2-1t-a32b",
+    "smollm-360m",
+    # the paper's own eval model family (Qwen2.5-Math-7B shaped)
+    "qwen25-math-7b",
+)
+
+
+def get_config(arch: str) -> ModelConfig:
+    mod_name = arch.replace("-", "_").replace(".", "_")
+    mod = importlib.import_module(f"repro.configs.{mod_name}")
+    cfg = mod.CONFIG
+    assert isinstance(cfg, ModelConfig)
+    return cfg
+
+
+def list_archs() -> Tuple[str, ...]:
+    return ARCH_IDS

@@ -1,0 +1,32 @@
+"""Jamba-1.5-Large (398B) — hybrid Mamba+attention with MoE.
+
+[arXiv:2403.19887].  72 layers, 1:7 attention:mamba interleave (one
+attention layer per 8-layer period, placed at index 4 within the period
+following the Jamba paper's mid-period placement), MoE 16 experts top-2
+on every other layer.
+"""
+from repro.config import ModelConfig, MoEConfig, MambaConfig, ATTN, MAMBA, FFN_DENSE, FFN_MOE
+
+# period of 8 layers: mamba everywhere except index 4; MoE on odd indices.
+_PERIOD = tuple(
+    (ATTN if i == 4 else MAMBA, FFN_MOE if i % 2 == 1 else FFN_DENSE)
+    for i in range(8)
+)
+
+CONFIG = ModelConfig(
+    name="jamba-1.5-large-398b",
+    arch_type="hybrid",
+    n_layers=72,
+    d_model=8192,
+    n_heads=64,
+    n_kv_heads=8,
+    d_ff=24576,
+    vocab_size=65536,
+    head_dim=128,
+    rope_theta=1e6,
+    period=_PERIOD,
+    moe=MoEConfig(n_experts=16, top_k=2, d_ff=24576),
+    mamba=MambaConfig(d_state=128, d_conv=4, expand=2, head_dim=128,
+                      chunk_size=256),
+    source="arXiv:2403.19887",
+)

@@ -1,0 +1,22 @@
+"""Kimi-K2 — trillion-parameter MoE, 384 experts top-8 (paper table).
+
+[arXiv:2501.kimi2].  61L d_model 7168, 64 query heads / 8 KV heads
+(paper-table GQA figure), per-expert FFN width 2048, vocab 163840.
+"""
+from repro.config import ModelConfig, MoEConfig, ATTN, FFN_MOE
+
+CONFIG = ModelConfig(
+    name="kimi-k2-1t-a32b",
+    arch_type="moe",
+    n_layers=61,
+    d_model=7168,
+    n_heads=64,
+    n_kv_heads=8,
+    d_ff=0,
+    vocab_size=163840,
+    head_dim=112,
+    rope_theta=5e6,
+    period=((ATTN, FFN_MOE),),
+    moe=MoEConfig(n_experts=384, top_k=8, d_ff=2048),
+    source="arXiv:2501.kimi2",
+)

@@ -1,0 +1,22 @@
+"""Mamba2-780m — attention-free SSM via SSD (state-space duality).
+
+[arXiv:2405.21060].  48 layers, d_model 1536, d_state 128, expand 2,
+head_dim 64 (n_heads = 48).  No attention layers -> the RaaS policy is
+inapplicable (no KV cache exists); see DESIGN.md §Arch-applicability.
+"""
+from repro.config import ModelConfig, MambaConfig, MAMBA
+
+CONFIG = ModelConfig(
+    name="mamba2-780m",
+    arch_type="ssm",
+    n_layers=48,
+    d_model=1536,
+    n_heads=0,
+    n_kv_heads=0,
+    d_ff=0,
+    vocab_size=50280,
+    period=((MAMBA, "none"),),
+    mamba=MambaConfig(d_state=128, d_conv=4, expand=2, head_dim=64,
+                      chunk_size=256),
+    source="arXiv:2405.21060",
+)

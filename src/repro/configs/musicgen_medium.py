@@ -1,0 +1,26 @@
+"""MusicGen-medium — decoder-only transformer over EnCodec tokens.
+
+[arXiv:2306.05284].  48L d_model 1536, 24 heads MHA (kv=24), FFN 6144,
+4 EnCodec codebooks of 2048 entries each (delay interleave pattern);
+codebook embeddings are summed at the input and 4 parallel LM heads
+produce per-codebook logits.  The EnCodec conv codec itself is a STUB
+per the assignment carve-out — ``input_specs`` supplies token ids (and
+optional conditioning prefix embeddings).
+"""
+from repro.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="musicgen-medium",
+    arch_type="audio",
+    n_layers=48,
+    d_model=1536,
+    n_heads=24,
+    n_kv_heads=24,
+    d_ff=6144,
+    vocab_size=2048,
+    head_dim=64,
+    rope_theta=1e4,
+    frontend="encodec_stub",
+    n_codebooks=4,
+    source="arXiv:2306.05284",
+)

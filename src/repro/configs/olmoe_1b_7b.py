@@ -1,0 +1,19 @@
+"""OLMoE-1B-7B — 64-expert top-8 MoE, MHA-style GQA (kv=16).  [arXiv:2409.02060]"""
+from repro.config import ModelConfig, MoEConfig, ATTN, FFN_MOE
+
+CONFIG = ModelConfig(
+    name="olmoe-1b-7b",
+    arch_type="moe",
+    n_layers=16,
+    d_model=2048,
+    n_heads=16,
+    n_kv_heads=16,
+    d_ff=0,
+    vocab_size=50304,
+    head_dim=128,
+    qk_norm=True,
+    rope_theta=1e4,
+    period=((ATTN, FFN_MOE),),
+    moe=MoEConfig(n_experts=64, top_k=8, d_ff=1024),
+    source="arXiv:2409.02060",
+)

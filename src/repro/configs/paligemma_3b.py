@@ -1,0 +1,27 @@
+"""PaliGemma-3B — gemma-style decoder consuming SigLIP patch embeddings.
+
+[arXiv:2407.07726].  The SigLIP vision tower + projector is a STUB per
+the assignment carve-out: ``input_specs`` supplies precomputed patch
+embeddings (224px / patch14 -> 256 patches) of shape
+``[batch, 256, d_model]``; this config defines the language decoder
+(gemma-2b: 18L, d_model 2048, MQA with 1 KV head, head_dim 256,
+gelu-gated FFN 16384).
+"""
+from repro.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="paligemma-3b",
+    arch_type="vlm",
+    n_layers=18,
+    d_model=2048,
+    n_heads=8,
+    n_kv_heads=1,
+    d_ff=16384,
+    vocab_size=257216,
+    head_dim=256,
+    rope_theta=1e4,
+    tie_embeddings=True,
+    frontend="siglip_stub",
+    n_prefix_tokens=256,
+    source="arXiv:2407.07726",
+)

@@ -1,0 +1,20 @@
+"""Qwen2.5-Math-7B-shaped config — the paper's own eval model family.
+
+[arXiv:2409.12122] — used by the RaaS paper for the waterfall-pattern
+analysis (28L x 28H) and the accuracy benchmarks.
+"""
+from repro.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen25-math-7b",
+    arch_type="dense",
+    n_layers=28,
+    d_model=3584,
+    n_heads=28,
+    n_kv_heads=4,
+    d_ff=18944,
+    vocab_size=152064,
+    head_dim=128,
+    rope_theta=1e4,
+    source="arXiv:2409.12122",
+)

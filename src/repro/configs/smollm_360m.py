@@ -1,0 +1,17 @@
+"""SmolLM-360M — small llama-architecture dense GQA.  [hf:HuggingFaceTB/SmolLM-135M]"""
+from repro.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="smollm-360m",
+    arch_type="dense",
+    n_layers=32,
+    d_model=960,
+    n_heads=15,
+    n_kv_heads=5,
+    d_ff=2560,
+    vocab_size=49152,
+    head_dim=64,
+    rope_theta=1e4,
+    tie_embeddings=True,
+    source="hf:HuggingFaceTB/SmolLM-135M",
+)

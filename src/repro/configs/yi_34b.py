@@ -1,0 +1,16 @@
+"""Yi-34B — llama-architecture dense GQA.  [arXiv:2403.04652]"""
+from repro.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="yi-34b",
+    arch_type="dense",
+    n_layers=60,
+    d_model=7168,
+    n_heads=56,
+    n_kv_heads=8,
+    d_ff=20480,
+    vocab_size=64000,
+    head_dim=128,
+    rope_theta=5e6,
+    source="arXiv:2403.04652",
+)

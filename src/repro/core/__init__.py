@@ -1,0 +1,7 @@
+"""The paper's primary contribution: RaaS KV-cache sparsity.
+
+paged_cache.py — slot-based fixed-capacity paged KV cache (O(L))
+policies.py    — raas | quest | h2o | streaming | dense | quest_raas
+attention.py   — policy-aware decode attention step (append / score /
+                 select / attend / refresh), one fused jittable fn
+"""

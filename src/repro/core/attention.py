@@ -1,0 +1,94 @@
+"""Policy-aware decode attention: the paper's algorithm, one step.
+
+``decode_attend`` is the per-layer, per-step entry point.  It
+
+  1. appends the new token's KV to the paged cache (allocating /
+     evicting per the policy's priorities — RaaS Figure 5 semantics),
+  2. scores pages against the query via representative keys
+     (Quest-style min/max bound, paper §3.3),
+  3. selects pages (Quest top-k; others attend the whole live cache —
+     for RaaS the live cache *is* the O(L) retained set),
+  4. runs the paged attention kernel (Pallas on TPU, jnp oracle on
+     CPU) which also emits true per-page probability mass,
+  5. refreshes priorities (RaaS timestamps / H2O accumulation).
+
+Everything is one fused jittable function of the cache pytree.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import RaasConfig
+from repro.core import paged_cache as pc
+from repro.core import policies
+from repro.kernels import ops
+
+
+def decode_attend(cache: pc.PagedCache, q: jnp.ndarray, k_new: jnp.ndarray,
+                  v_new: jnp.ndarray, cfg: RaasConfig,
+                  has_prefill: bool = True,
+                  impl: str = "jnp") -> Tuple[pc.PagedCache, jnp.ndarray,
+                                              policies.PolicyStats]:
+    """One decode step of sparse attention for one layer.
+
+    q      [B, H, hd]   (post-RoPE query for the new token)
+    k_new  [B, KV, hd]  (post-RoPE key)
+    v_new  [B, KV, hd]
+
+    Returns (cache', ctx [B, H, hd], stats).
+    """
+    B, H, hd = q.shape
+    scale = 1.0 / (hd ** 0.5)
+
+    # -- 1. append (evict if the policy's budget is exhausted) -------------
+    cache, evicted = pc.append_token(
+        cache, k_new, v_new,
+        new_page_priority=policies.new_page_priority(cache, cfg),
+        protect_recent=policies.protect_recent_tokens(cfg),
+        pin_below_pos=policies.sink_pin_below(has_prefill, cfg),
+    )
+
+    # -- 2. representative page scores -------------------------------------
+    valid = cache.valid_pages()
+    if cfg.rep_scheme == "mean":
+        rep_mid = 0.5 * (cache.rep_min + cache.rep_max)
+        scores = ops.page_score(q, rep_mid, rep_mid, valid, scale, impl=impl)
+    else:
+        scores = ops.page_score(q, cache.rep_min, cache.rep_max, valid,
+                                scale, impl=impl)
+
+    # -- 3. page selection ---------------------------------------------------
+    sel_idx = policies.select_pages(cache, scores, cfg)
+    token_mask = cache.token_mask()
+    if sel_idx is None:
+        k_sel, v_sel, mask_sel = cache.k_pages, cache.v_pages, token_mask
+    else:
+        barange = jnp.arange(B)[:, None]
+        k_sel = cache.k_pages[barange, sel_idx]
+        v_sel = cache.v_pages[barange, sel_idx]
+        mask_sel = token_mask[barange, sel_idx]
+
+    # -- 4. paged attention + true per-page probability mass ---------------
+    ctx, page_probs_sel = ops.paged_decode_attention(
+        q, k_sel, v_sel, mask_sel, scale, impl=impl)
+
+    # scatter per-page probs back to full slot space for H2O
+    if sel_idx is None:
+        page_probs = page_probs_sel
+    else:
+        page_probs = jnp.zeros(valid.shape, jnp.float32)
+        page_probs = page_probs.at[jnp.arange(B)[:, None], sel_idx].add(
+            page_probs_sel)
+
+    # -- 5. priority refresh -------------------------------------------------
+    cache = policies.refresh_priority(cache, scores, page_probs, cfg)
+
+    stats = policies.PolicyStats(
+        evicted_slot=evicted,
+        pages_attended=(mask_sel.any(-1)).sum(-1).astype(jnp.int32),
+        tokens_cached=cache.tokens_cached(),
+    )
+    return cache, ctx, stats

@@ -1,0 +1,253 @@
+"""Slot-based fixed-capacity paged KV cache (the O(L)-memory substrate).
+
+The reference RaaS implementation (HF + Quest CUDA) allocates/frees KV
+pages dynamically on the host.  On TPU under jit everything must be
+static-shape, so "eviction" here means *overwriting a victim slot*:
+
+    k_pages / v_pages  [B, S, P, KV, hd]   S = n_slots, P = page_size
+    rep_min / rep_max  [B, S, KV, hd]      Quest representative keys
+    priority           [B, S] f32          policy-specific eviction key
+    page_pos           [B, S] i32          first-token position, -1 = free
+    page_len           [B, S] i32          tokens filled (0..P)
+    pinned             [B, S] bool         prefill pages are exempt
+    active_slot        [B]    i32          slot currently being filled (-1)
+    cur_len            [B]    i32          tokens written so far
+
+All operations are O(S) vector ops per decode step — fully jittable,
+batched, and shardable on the batch axis.  The policy layer
+(policies.py) decides priorities; this module only knows "evict argmin
+priority among unpinned".
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+INF = jnp.float32(1e30)
+
+
+class CacheSpec(NamedTuple):
+    """Static cache geometry (hashable; safe as a jit static arg)."""
+
+    n_slots: int
+    page_size: int
+    n_kv_heads: int
+    head_dim: int
+    dtype: jnp.dtype = jnp.float32
+
+    @property
+    def capacity_tokens(self) -> int:
+        return self.n_slots * self.page_size
+
+
+class PagedCache(NamedTuple):
+    k_pages: jnp.ndarray    # [B, S, P, KV, hd]
+    v_pages: jnp.ndarray    # [B, S, P, KV, hd]
+    rep_min: jnp.ndarray    # [B, S, KV, hd] f32
+    rep_max: jnp.ndarray    # [B, S, KV, hd] f32
+    priority: jnp.ndarray   # [B, S] f32
+    page_pos: jnp.ndarray   # [B, S] i32 (-1 = free)
+    page_len: jnp.ndarray   # [B, S] i32
+    pinned: jnp.ndarray     # [B, S] bool
+    active_slot: jnp.ndarray  # [B] i32 (-1 = none)
+    cur_len: jnp.ndarray    # [B] i32
+
+    @property
+    def batch(self) -> int:
+        return self.k_pages.shape[0]
+
+    def valid_pages(self) -> jnp.ndarray:
+        """[B, S] bool — slots holding at least one token."""
+        return self.page_len > 0
+
+    def token_mask(self) -> jnp.ndarray:
+        """[B, S, P] bool — live token positions."""
+        P = self.k_pages.shape[2]
+        return jnp.arange(P)[None, None, :] < self.page_len[:, :, None]
+
+    def tokens_cached(self) -> jnp.ndarray:
+        """[B] i32 — number of live tokens (<= capacity)."""
+        return self.page_len.sum(axis=1)
+
+
+def init_cache(spec: CacheSpec, batch: int) -> PagedCache:
+    S, P, KV, hd = spec.n_slots, spec.page_size, spec.n_kv_heads, spec.head_dim
+    z = lambda *shape: jnp.zeros(shape, spec.dtype)
+    return PagedCache(
+        k_pages=z(batch, S, P, KV, hd),
+        v_pages=z(batch, S, P, KV, hd),
+        rep_min=jnp.full((batch, S, KV, hd), INF, jnp.float32),
+        rep_max=jnp.full((batch, S, KV, hd), -INF, jnp.float32),
+        priority=jnp.zeros((batch, S), jnp.float32),
+        page_pos=jnp.full((batch, S), -1, jnp.int32),
+        page_len=jnp.zeros((batch, S), jnp.int32),
+        pinned=jnp.zeros((batch, S), jnp.bool_),
+        active_slot=jnp.full((batch,), -1, jnp.int32),
+        cur_len=jnp.zeros((batch,), jnp.int32),
+    )
+
+
+def ingest_prefill(cache: PagedCache, k: jnp.ndarray, v: jnp.ndarray,
+                   lengths: jnp.ndarray, pin: bool = True) -> PagedCache:
+    """Pack prefill keys/values into the first ceil(len/P) slots.
+
+    k, v: [B, S_pre, KV, hd] (post-RoPE).  ``lengths``: [B] i32 actual
+    prefill length per sequence (ragged batches supported; positions
+    >= length are ignored).  Prefill pages are pinned (paper §3.2: all
+    prefill tokens are retained; phoenix tokens live there).
+
+    Decode tokens never share a page with prefill: ``active_slot`` is
+    left at -1 so the first appended token allocates a fresh page.
+    """
+    B, S_pre, KV, hd = k.shape
+    S, P = cache.k_pages.shape[1], cache.k_pages.shape[2]
+    n_pre_pages = -(-S_pre // P)
+    if n_pre_pages > S:
+        raise ValueError(
+            f"prefill ({S_pre} tokens = {n_pre_pages} pages) exceeds cache "
+            f"capacity ({S} slots); the paper recommends Quest for "
+            f"long-prefill workloads")
+    pad = n_pre_pages * P - S_pre
+    kp = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kp = kp.reshape(B, n_pre_pages, P, KV, hd).astype(cache.k_pages.dtype)
+    vp = vp.reshape(B, n_pre_pages, P, KV, hd).astype(cache.v_pages.dtype)
+
+    pos_in_seq = (jnp.arange(n_pre_pages * P)
+                  .reshape(n_pre_pages, P))                       # [pages, P]
+    live = pos_in_seq[None] < lengths[:, None, None]              # [B, pages, P]
+    plen = live.sum(-1).astype(jnp.int32)                         # [B, pages]
+    ppos = (pos_in_seq[:, 0][None] * jnp.ones((B, 1), jnp.int32))
+    ppos = jnp.where(plen > 0, ppos, -1)
+
+    kf = jnp.where(live[..., None, None], kp.astype(jnp.float32), INF)
+    rep_min = kf.min(axis=2)                                      # [B,pages,KV,hd]
+    kf = jnp.where(live[..., None, None], kp.astype(jnp.float32), -INF)
+    rep_max = kf.max(axis=2)
+
+    k_pages = cache.k_pages.at[:, :n_pre_pages].set(
+        jnp.where(live[..., None, None], kp, 0))
+    v_pages = cache.v_pages.at[:, :n_pre_pages].set(
+        jnp.where(live[..., None, None], vp, 0))
+    return cache._replace(
+        k_pages=k_pages,
+        v_pages=v_pages,
+        rep_min=cache.rep_min.at[:, :n_pre_pages].set(rep_min),
+        rep_max=cache.rep_max.at[:, :n_pre_pages].set(rep_max),
+        priority=cache.priority.at[:, :n_pre_pages].set(
+            jnp.where(plen > 0, ppos.astype(jnp.float32), 0.0)),
+        page_pos=cache.page_pos.at[:, :n_pre_pages].set(ppos),
+        page_len=cache.page_len.at[:, :n_pre_pages].set(plen),
+        pinned=cache.pinned.at[:, :n_pre_pages].set(
+            jnp.logical_and(pin, plen > 0)),
+        active_slot=jnp.full((B,), -1, jnp.int32),
+        cur_len=lengths.astype(jnp.int32),
+    )
+
+
+def _eviction_key(cache: PagedCache, protect_recent: int) -> jnp.ndarray:
+    """[B, S] f32 — argmin of this picks the victim slot.
+
+    Free slots are preferred (-INF); pinned pages are hard-protected
+    (+INF).  The active page and pages inside the recent-token window
+    are *softly* protected: when every unpinned page is soft-protected
+    (pathologically tight budgets), the soft protections are dropped in
+    order (recent first, then active) rather than evicting a pinned
+    prefill page — the paper's invariant is that prefill KV survives.
+    """
+    free = cache.page_pos < 0
+    S = cache.priority.shape[1]
+    is_active = (jnp.arange(S)[None] == cache.active_slot[:, None])
+    recent_edge = cache.cur_len[:, None] - protect_recent
+    in_recent = ((cache.page_pos + cache.page_len) > recent_edge) & ~free
+
+    base = jnp.where(cache.pinned, INF, cache.priority)
+    base = jnp.where(free, -INF, base)
+    k_recent = jnp.where(in_recent, INF, base)
+    k_full = jnp.where(is_active, INF, k_recent)
+
+    def has_victim(k):
+        return (jnp.min(k, axis=1, keepdims=True) < INF / 2)
+
+    key = jnp.where(has_victim(k_full), k_full,
+                    jnp.where(has_victim(k_recent), k_recent, base))
+    return key
+
+
+def append_token(cache: PagedCache, k_new: jnp.ndarray, v_new: jnp.ndarray,
+                 new_page_priority: jnp.ndarray,
+                 protect_recent: int = 0,
+                 pin_below_pos: int = 0) -> Tuple[PagedCache, jnp.ndarray]:
+    """Append one token's KV per sequence, evicting if necessary.
+
+    k_new, v_new: [B, KV, hd] (post-RoPE).  ``new_page_priority``: [B]
+    f32 priority assigned to a freshly allocated page.  ``pin_below_pos``
+    pins pages whose first token position is below the threshold
+    (StreamingLLM sink behaviour for prompt-less decode).
+
+    Returns (cache, evicted_slot [B] i32; -1 where no eviction happened
+    — i.e. a free slot was used or the active page had room).
+    """
+    B, KV, hd = k_new.shape
+    S, P = cache.k_pages.shape[1], cache.k_pages.shape[2]
+    barange = jnp.arange(B)
+
+    active = cache.active_slot
+    have_active = active >= 0
+    active_idx = jnp.where(have_active, active, 0)
+    active_len = cache.page_len[barange, active_idx]
+    active_full = jnp.where(have_active, active_len >= P, True)
+
+    need_alloc = active_full
+    evict_key = _eviction_key(cache, protect_recent)
+    victim = jnp.argmin(evict_key, axis=1).astype(jnp.int32)
+    victim_was_free = cache.page_pos[barange, victim] < 0
+    evicted = jnp.where(need_alloc & ~victim_was_free, victim, -1)
+
+    slot = jnp.where(need_alloc, victim, active_idx)
+    # reset the victim slot where allocating, then write the new token
+    page_pos = cache.page_pos.at[barange, slot].set(
+        jnp.where(need_alloc, cache.cur_len, cache.page_pos[barange, slot]))
+    page_len = cache.page_len.at[barange, slot].set(
+        jnp.where(need_alloc, 0, cache.page_len[barange, slot]))
+    rep_min = cache.rep_min.at[barange, slot].set(
+        jnp.where(need_alloc[:, None, None], INF,
+                  cache.rep_min[barange, slot]))
+    rep_max = cache.rep_max.at[barange, slot].set(
+        jnp.where(need_alloc[:, None, None], -INF,
+                  cache.rep_max[barange, slot]))
+    priority = cache.priority.at[barange, slot].set(
+        jnp.where(need_alloc, new_page_priority,
+                  cache.priority[barange, slot]))
+    pinned = cache.pinned.at[barange, slot].set(
+        jnp.where(need_alloc,
+                  cache.cur_len < pin_below_pos,
+                  cache.pinned[barange, slot]))
+    # zero the KV of a reset page so stale tokens can't leak through
+    k_pages = cache.k_pages.at[barange, slot].set(
+        jnp.where(need_alloc[:, None, None, None], 0,
+                  cache.k_pages[barange, slot]))
+    v_pages = cache.v_pages.at[barange, slot].set(
+        jnp.where(need_alloc[:, None, None, None], 0,
+                  cache.v_pages[barange, slot]))
+
+    offset = jnp.where(need_alloc, 0, active_len)
+    k_pages = k_pages.at[barange, slot, offset].set(
+        k_new.astype(k_pages.dtype))
+    v_pages = v_pages.at[barange, slot, offset].set(
+        v_new.astype(v_pages.dtype))
+    rep_min = rep_min.at[barange, slot].min(k_new.astype(jnp.float32))
+    rep_max = rep_max.at[barange, slot].max(k_new.astype(jnp.float32))
+    page_len = page_len.at[barange, slot].add(1)
+
+    new_cache = cache._replace(
+        k_pages=k_pages, v_pages=v_pages,
+        rep_min=rep_min, rep_max=rep_max,
+        priority=priority, page_pos=page_pos, page_len=page_len,
+        pinned=pinned,
+        active_slot=slot,
+        cur_len=cache.cur_len + 1,
+    )
+    return new_cache, evicted

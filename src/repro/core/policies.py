@@ -1,0 +1,170 @@
+"""KV-sparsity policies: RaaS (the paper), Quest, H2O, StreamingLLM, Dense.
+
+All five are expressed over the same :class:`PagedCache` by varying
+three hooks:
+
+  * ``cache_slots(cfg, max_seq)``   — how much memory the policy needs
+    (this IS the paper's O(L)-vs-O(N) distinction, made structural);
+  * ``select(cache, scores, cfg)``  — which pages the decode attention
+    may touch this step (Quest's top-k; everyone else: all live pages);
+  * ``refresh(cache, scores, page_probs, cfg)`` — how eviction priority
+    evolves (RaaS timestamps, H2O accumulation, Streaming: frozen).
+
+Paper mapping (§3.2):
+  RaaS      priority = timestamp of last step whose *estimated* page
+            score passed the alpha/top-r rule; evict argmin; prefill
+            pinned.  O(L) slots.
+  Streaming priority = arrival order, never refreshed -> sliding window
+            + pinned prefill (sink).  O(L) slots.
+  H2O       priority = accumulated true attention mass; recent window
+            protected.  O(L) slots, page_size=1 recommended (token
+            granularity, as in the paper's description).
+  Quest     O(N) slots, never evicts; top-k pages by estimated score
+            are attended each step.  O(L) time, O(N) memory.
+  Dense     O(N) slots, attends everything.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import RaasConfig
+from repro.core.paged_cache import PagedCache, INF
+
+_NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Capacity: the O(L) vs O(N) axis.
+# ---------------------------------------------------------------------------
+def cache_slots(cfg: RaasConfig, max_seq_len: int, prefill_len: int = 0) -> int:
+    """Number of cache slots the policy requires for ``max_seq_len``."""
+    P = cfg.page_size
+    if cfg.policy in ("dense", "quest"):
+        # +1: prefill never shares a page with decode, so a partial
+        # prefill tail page costs one extra slot.
+        return -(-max_seq_len // P) + 1                  # O(N)
+    budget_pages = cfg.budget_tokens // P
+    pre_pages = -(-prefill_len // P)
+    if cfg.policy in ("raas", "streaming", "h2o"):
+        # paper: budget includes pinned prefill; guarantee at least one
+        # decode page so generation can proceed.
+        return max(budget_pages, pre_pages + 1)          # O(L)
+    if cfg.policy == "quest_raas":
+        # hybrid (paper §Limitations recommendation): prefill pages are
+        # all *retained* (Quest-selected at attention time), decode
+        # pages get the RaaS budget -> O(N_prefill + L) memory,
+        # O(k + L) attention time.
+        return pre_pages + budget_pages
+    raise ValueError(cfg.policy)
+
+
+# ---------------------------------------------------------------------------
+# RaaS timestamp-refresh rule (paper §3.2, "The Choice of alpha").
+# ---------------------------------------------------------------------------
+def raas_selected_mask(scores: jnp.ndarray, valid: jnp.ndarray,
+                       cfg: RaasConfig) -> jnp.ndarray:
+    """[B, S] bool — pages whose timestamp refreshes this step.
+
+    ``scores`` are logit-scale estimated page scores (-inf at invalid).
+    ``use_top_r``: refresh the ceil(r * n_valid) highest-scoring pages
+    (the paper's recommended r = 50% rule).  Otherwise: refresh pages
+    whose softmax probability exceeds alpha.
+    """
+    if cfg.use_top_r:
+        # rank pages descending by score; rank < ceil(r * n_valid)
+        order = jnp.argsort(-scores, axis=1)
+        ranks = jnp.argsort(order, axis=1)               # rank of each slot
+        n_valid = valid.sum(axis=1, keepdims=True)
+        cutoff = jnp.ceil(cfg.top_r * n_valid).astype(jnp.int32)
+        return (ranks < cutoff) & valid
+    # alpha rule on estimated softmax probabilities
+    m = jnp.max(jnp.where(valid, scores, _NEG_INF), axis=1, keepdims=True)
+    e = jnp.where(valid, jnp.exp(scores - m), 0.0)
+    probs = e / jnp.maximum(e.sum(axis=1, keepdims=True), 1e-30)
+    return (probs > cfg.alpha) & valid
+
+
+# ---------------------------------------------------------------------------
+# Selection: which pages this step's attention touches.
+# ---------------------------------------------------------------------------
+def select_pages(cache: PagedCache, scores: jnp.ndarray,
+                 cfg: RaasConfig) -> Optional[jnp.ndarray]:
+    """Return gather indices [B, K] for Quest-style policies, or
+    None = attend the whole live cache."""
+    B, S = scores.shape
+    barange = jnp.arange(B)
+    if cfg.policy == "quest":
+        k = min(cfg.quest_topk_pages, S)
+        # always include the active page (recent tokens), Quest-style.
+        active = jnp.where(cache.active_slot >= 0, cache.active_slot, 0)
+        boosted = scores.at[barange, active].set(INF)
+        _, idx = jax.lax.top_k(boosted, k)
+        return idx.astype(jnp.int32)
+    if cfg.policy == "quest_raas":
+        # top-k among the (static) prefill slot range + every decode
+        # slot.  Slot layout guarantees prefill occupies [0, n_pre).
+        n_pre = cfg.prefill_pages_hint
+        if n_pre == 0 or n_pre >= S:
+            return None
+        k = min(cfg.quest_topk_pages, n_pre)
+        _, idx = jax.lax.top_k(scores[:, :n_pre], k)
+        decode_idx = jnp.broadcast_to(jnp.arange(n_pre, S), (B, S - n_pre))
+        return jnp.concatenate([idx, decode_idx], axis=1).astype(jnp.int32)
+    return None
+
+
+# ---------------------------------------------------------------------------
+# Refresh: eviction-priority dynamics.
+# ---------------------------------------------------------------------------
+def refresh_priority(cache: PagedCache, scores: jnp.ndarray,
+                     page_probs: jnp.ndarray, cfg: RaasConfig) -> PagedCache:
+    """Update per-page priorities after a decode step.
+
+    ``scores``: estimated page scores [B, S] (rep-key based, logit
+    scale).  ``page_probs``: true attention probability mass per page
+    [B, S] (from the attention kernel; H2O's signal).
+    """
+    valid = cache.valid_pages()
+    if cfg.policy in ("raas", "quest_raas"):
+        sel = raas_selected_mask(scores, valid, cfg)
+        now = cache.cur_len.astype(jnp.float32)[:, None]
+        return cache._replace(
+            priority=jnp.where(sel, now, cache.priority))
+    if cfg.policy == "h2o":
+        return cache._replace(
+            priority=cache.priority + jnp.where(valid, page_probs, 0.0))
+    # streaming / dense / quest: priorities are static (arrival order /
+    # unused).
+    return cache
+
+
+def new_page_priority(cache: PagedCache, cfg: RaasConfig) -> jnp.ndarray:
+    """[B] f32 priority for a freshly allocated page."""
+    now = cache.cur_len.astype(jnp.float32)
+    if cfg.policy == "h2o":
+        return jnp.zeros_like(now)       # protected by the recent window
+    return now                           # raas timestamp / arrival order
+
+
+def protect_recent_tokens(cfg: RaasConfig) -> int:
+    if cfg.policy == "h2o":
+        return cfg.h2o_recent
+    return 0
+
+
+def sink_pin_below(cache_has_prefill: bool, cfg: RaasConfig) -> int:
+    """StreamingLLM pins sink tokens when there is no pinned prefill."""
+    if cfg.policy == "streaming" and not cache_has_prefill:
+        return cfg.sink_tokens
+    return 0
+
+
+class PolicyStats(NamedTuple):
+    """Per-step observability (benchmarks/Fig-proxies consume this)."""
+
+    evicted_slot: jnp.ndarray       # [B] i32, -1 = none
+    pages_attended: jnp.ndarray     # [B] i32
+    tokens_cached: jnp.ndarray      # [B] i32

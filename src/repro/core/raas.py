@@ -1,0 +1,15 @@
+"""Convenience facade for the RaaS algorithm (paper sections 3.2-3.3).
+
+The implementation is split across paged_cache (memory substrate),
+policies (timestamp/eviction semantics) and attention (the fused decode
+step); this module re-exports the public surface under one name.
+"""
+from repro.config import RaasConfig
+from repro.core.attention import decode_attend
+from repro.core.paged_cache import CacheSpec, PagedCache, init_cache, ingest_prefill
+from repro.core.policies import cache_slots, raas_selected_mask
+
+__all__ = [
+    "RaasConfig", "decode_attend", "CacheSpec", "PagedCache",
+    "init_cache", "ingest_prefill", "cache_slots", "raas_selected_mask",
+]

@@ -1,0 +1,115 @@
+"""Pallas TPU kernel: blocked causal flash attention (prefill stage).
+
+The paper keeps the prefill stage dense (sparsity applies to decode
+only), so this is a standard online-softmax flash kernel, GQA-aware via
+the BlockSpec index map (kv head = query head // G).
+
+Grid (B, H, nQ, nK); the kv axis is sequential (accumulation), causal
+upper-triangle blocks are skipped with @pl.when so no FLOPs or VMEM
+traffic is spent on them.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(scale: float, q_offset: int, kv_len: int, bQ: int, bK: int,
+            q_ref, k_ref, v_ref, o_ref, m_s, l_s, acc_s):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+    nK = pl.num_programs(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_s[...] = jnp.full_like(m_s, NEG_INF)
+        l_s[...] = jnp.zeros_like(l_s)
+        acc_s[...] = jnp.zeros_like(acc_s)
+
+    # causal block skip: the whole kv block is in the future of the
+    # whole q block.
+    last_q_pos = qi * bQ + (bQ - 1) + q_offset
+    first_k_pos = ki * bK
+
+    @pl.when(first_k_pos <= last_q_pos)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)        # [bQ, hd]
+        k = k_ref[0, 0].astype(jnp.float32)        # [bK, hd]
+        v = v_ref[0, 0].astype(jnp.float32)
+
+        logits = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale       # [bQ, bK]
+        qpos = qi * bQ + jax.lax.broadcasted_iota(jnp.int32, (bQ, bK), 0) \
+            + q_offset
+        kpos = ki * bK + jax.lax.broadcasted_iota(jnp.int32, (bQ, bK), 1)
+        mask = (qpos >= kpos) & (kpos < kv_len)
+        logits = jnp.where(mask, logits, NEG_INF)
+
+        m_prev = m_s[...]
+        m_new = jnp.maximum(m_prev, logits.max(axis=-1))
+        corr = jnp.exp(m_prev - m_new)
+        p = jnp.where(mask, jnp.exp(logits - m_new[:, None]), 0.0)
+        l_s[...] = l_s[...] * corr + p.sum(axis=-1)
+        acc_s[...] = acc_s[...] * corr[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_s[...] = m_new
+
+    @pl.when(ki == nK - 1)
+    def _fin():
+        denom = jnp.maximum(l_s[...], 1e-30)
+        o_ref[0, 0] = (acc_s[...] / denom[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "q_offset", "kv_len",
+                                             "block_q", "block_k",
+                                             "interpret"))
+def flash_prefill_pallas(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                         scale: float, q_offset: int = 0, kv_len: int = 0,
+                         block_q: int = 256, block_k: int = 256,
+                         interpret: bool = True) -> jnp.ndarray:
+    """q [B,H,Sq,hd]; k/v [B,KV,Skv,hd] (padded to block multiples).
+
+    ``kv_len``: true kv length (<= Skv); padding keys are masked.
+    Returns ctx [B, H, Sq, hd].
+    """
+    B, H, Sq, hd = q.shape
+    KV, Skv = k.shape[1], k.shape[2]
+    G = H // KV
+    bQ, bK = min(block_q, Sq), min(block_k, Skv)
+    assert Sq % bQ == 0 and Skv % bK == 0
+    nQ, nK = Sq // bQ, Skv // bK
+    kv_len = kv_len or Skv
+
+    kernel = functools.partial(_kernel, scale, q_offset, kv_len, bQ, bK)
+    return pl.pallas_call(
+        kernel,
+        grid=(B, H, nQ, nK),
+        in_specs=[
+            pl.BlockSpec((1, 1, bQ, hd), lambda b, h, qi, ki: (b, h, qi, 0)),
+            pl.BlockSpec((1, 1, bK, hd),
+                         lambda b, h, qi, ki: (b, h // G, ki, 0)),
+            pl.BlockSpec((1, 1, bK, hd),
+                         lambda b, h, qi, ki: (b, h // G, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bQ, hd),
+                               lambda b, h, qi, ki: (b, h, qi, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((bQ,), jnp.float32),
+            pltpu.VMEM((bQ,), jnp.float32),
+            pltpu.VMEM((bQ, hd), jnp.float32),
+        ],
+        out_shape=jax.ShapeDtypeStruct((B, H, Sq, hd), q.dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary")),
+        interpret=interpret,
+        name="raas_flash_prefill",
+    )(q, k, v)

@@ -1,0 +1,132 @@
+"""Memory-bounded causal flash attention in pure jnp (lax.scan + custom VJP).
+
+This is the *lowered* attention used for train/prefill at production
+sequence lengths: the dry-run compiles this graph, so cost_analysis
+sees real attention FLOPs/bytes, while peak memory stays
+O(Sq * block) instead of O(Sq * Skv) — in both the forward scan and
+the hand-written FlashAttention-style backward (residuals: out + lse
+only, per-block recompute).
+
+The Pallas kernel (flash_prefill.py) is the TPU-target implementation
+of the same contract; this module is its jnp twin with a backward pass.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _blocks(x: jnp.ndarray, block: int, axis: int) -> jnp.ndarray:
+    """[..., T, ...] -> [nb, ..., block, ...] (T padded to multiple)."""
+    T = x.shape[axis]
+    pad = (-T) % block
+    if pad:
+        widths = [(0, 0)] * x.ndim
+        widths[axis] = (0, pad)
+        x = jnp.pad(x, widths)
+    nb = x.shape[axis] // block
+    new_shape = x.shape[:axis] + (nb, block) + x.shape[axis + 1:]
+    x = x.reshape(new_shape)
+    return jnp.moveaxis(x, axis, 0)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def flash_causal(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                 scale: float, q_offset: int = 0,
+                 block: int = 256) -> jnp.ndarray:
+    """q [B,Sq,H,hd]; k/v [B,Skv,KV,hd] -> ctx [B,Sq,H,hd], causal."""
+    out, _ = _fwd_impl(q, k, v, scale, q_offset, block)
+    return out
+
+
+def _fwd_impl(q, k, v, scale, q_offset, block):
+    B, Sq, H, hd = q.shape
+    Skv, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, Sq, KV, G, hd).astype(jnp.float32)
+    qg = qg.transpose(0, 2, 3, 1, 4)                     # [B,KV,G,Sq,hd]
+    kb = _blocks(k.astype(jnp.float32).transpose(0, 2, 1, 3), block, 2)
+    vb = _blocks(v.astype(jnp.float32).transpose(0, 2, 1, 3), block, 2)
+    nb = kb.shape[0]
+    qpos = (jnp.arange(Sq) + q_offset)[None, None, None, :, None]
+
+    def body(carry, xs):
+        m, l, acc = carry
+        kblk, vblk, bi = xs                              # [B,KV,block,hd]
+        logits = jnp.einsum("bkgqd,bktd->bkgqt", qg, kblk) * scale
+        kpos = bi * block + jnp.arange(block)
+        mask = (qpos >= kpos) & (kpos < Skv)[None, None, None, None, :]
+        logits = jnp.where(mask, logits, NEG_INF)
+        m_new = jnp.maximum(m, logits.max(-1))
+        corr = jnp.exp(m - m_new)
+        p = jnp.where(mask, jnp.exp(logits - m_new[..., None]), 0.0)
+        l = l * corr + p.sum(-1)
+        acc = acc * corr[..., None] + jnp.einsum("bkgqt,bktd->bkgqd",
+                                                 p, vblk)
+        return (m_new, l, acc), None
+
+    m0 = jnp.full((B, KV, G, Sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, KV, G, Sq), jnp.float32)
+    a0 = jnp.zeros((B, KV, G, Sq, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, a0), (kb, vb, jnp.arange(nb)))
+    denom = jnp.maximum(l, 1e-30)
+    out = (acc / denom[..., None])
+    lse = m + jnp.log(denom)                             # [B,KV,G,Sq]
+    out_q = out.transpose(0, 3, 1, 2, 4).reshape(B, Sq, H, hd)
+    return out_q.astype(q.dtype), lse
+
+
+def _fwd(q, k, v, scale, q_offset, block):
+    out, lse = _fwd_impl(q, k, v, scale, q_offset, block)
+    return out, (q, k, v, out, lse)
+
+
+def _bwd(scale, q_offset, block, res, dout):
+    q, k, v, out, lse = res
+    B, Sq, H, hd = q.shape
+    Skv, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, Sq, KV, G, hd).astype(jnp.float32) \
+        .transpose(0, 2, 3, 1, 4)                        # [B,KV,G,Sq,hd]
+    og = out.reshape(B, Sq, KV, G, hd).astype(jnp.float32) \
+        .transpose(0, 2, 3, 1, 4)
+    dg = dout.reshape(B, Sq, KV, G, hd).astype(jnp.float32) \
+        .transpose(0, 2, 3, 1, 4)
+    D = (dg * og).sum(-1)                                # [B,KV,G,Sq]
+
+    kb = _blocks(k.astype(jnp.float32).transpose(0, 2, 1, 3), block, 2)
+    vb = _blocks(v.astype(jnp.float32).transpose(0, 2, 1, 3), block, 2)
+    nb = kb.shape[0]
+    qpos = (jnp.arange(Sq) + q_offset)[None, None, None, :, None]
+
+    def body(dq, xs):
+        kblk, vblk, bi = xs
+        logits = jnp.einsum("bkgqd,bktd->bkgqt", qg, kblk) * scale
+        kpos = bi * block + jnp.arange(block)
+        mask = (qpos >= kpos) & (kpos < Skv)[None, None, None, None, :]
+        p = jnp.where(mask, jnp.exp(logits - lse[..., None]), 0.0)
+        dp = jnp.einsum("bkgqd,bktd->bkgqt", dg, vblk)
+        ds = p * (dp - D[..., None]) * scale             # [B,KV,G,Sq,t]
+        dq = dq + jnp.einsum("bkgqt,bktd->bkgqd", ds, kblk)
+        dk_blk = jnp.einsum("bkgqt,bkgqd->bktd", ds, qg)
+        dv_blk = jnp.einsum("bkgqt,bkgqd->bktd", p, dg)
+        return dq, (dk_blk, dv_blk)
+
+    dq0 = jnp.zeros_like(qg)
+    dq, (dk_b, dv_b) = jax.lax.scan(body, dq0,
+                                    (kb, vb, jnp.arange(nb)))
+    dq_out = dq.transpose(0, 3, 1, 2, 4).reshape(B, Sq, H, hd)
+    dk = jnp.moveaxis(dk_b, 0, 2).reshape(B, KV, nb * block, hd)
+    dv = jnp.moveaxis(dv_b, 0, 2).reshape(B, KV, nb * block, hd)
+    dk = dk[:, :, :Skv].transpose(0, 2, 1, 3)
+    dv = dv[:, :, :Skv].transpose(0, 2, 1, 3)
+    return (dq_out.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype))
+
+
+flash_causal.defvjp(_fwd, _bwd)

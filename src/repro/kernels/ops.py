@@ -1,0 +1,151 @@
+"""Public kernel API with implementation dispatch.
+
+Every op takes ``impl``:
+  "jnp"               — pure-jnp oracle (CPU fast path; what the
+                        distributed dry-run lowers so cost_analysis
+                        sees real FLOPs/bytes),
+  "pallas_interpret"  — Pallas kernel, interpret mode (CPU-validated),
+  "pallas"            — Pallas kernel compiled for TPU (the target).
+
+The Pallas wrappers handle layout (page-major transposes), padding to
+block multiples, and the online-softmax page-probability fixup.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+
+IMPLS = ("jnp", "pallas", "pallas_interpret")
+
+
+def _round_up(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+# ---------------------------------------------------------------------------
+# Paged decode attention
+# ---------------------------------------------------------------------------
+def paged_decode_attention(q: jnp.ndarray, k_pages: jnp.ndarray,
+                           v_pages: jnp.ndarray, token_mask: jnp.ndarray,
+                           scale: float, impl: str = "jnp",
+                           block_tokens: int = 512
+                           ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """q [B,H,hd]; k/v_pages [B,S,P,KV,hd]; token_mask [B,S,P] bool.
+
+    Returns (ctx [B,H,hd], page_probs [B,S] — true probability mass per
+    page summed over heads).
+    """
+    if impl == "jnp":
+        return ref.paged_decode_attention_ref(q, k_pages, v_pages,
+                                              token_mask, scale)
+    from repro.kernels.paged_attention import paged_decode_attention_pallas
+
+    B, H, hd = q.shape
+    S, P, KV = k_pages.shape[1:4]
+    G = H // KV
+    qg = q.reshape(B, KV, G, hd)
+    # page-major token layout [B, KV, T, hd]
+    kt = k_pages.reshape(B, S * P, KV, hd).transpose(0, 2, 1, 3)
+    vt = v_pages.reshape(B, S * P, KV, hd).transpose(0, 2, 1, 3)
+    mask = token_mask.reshape(B, S * P).astype(jnp.float32)
+
+    T = S * P
+    bT = min(block_tokens, _round_up(T, P))
+    bT = max(P, (bT // P) * P)
+    Tp = _round_up(T, bT)
+    if Tp != T:
+        pad = Tp - T
+        kt = jnp.pad(kt, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        vt = jnp.pad(vt, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        mask = jnp.pad(mask, ((0, 0), (0, pad)))
+
+    ctx, psums, bmax, ml = paged_decode_attention_pallas(
+        qg, kt, vt, mask, scale=scale, page_size=P, block_tokens=bT,
+        interpret=(impl == "pallas_interpret"))
+
+    # fixup: true page probs = psum * exp(m_block - m_final) / l_final
+    nT = bmax.shape[-1]
+    Sp = Tp // P
+    pages_per_block = bT // P
+    m_final = ml[..., 0:1]                                  # [B,KV,G,1]
+    l_final = jnp.maximum(ml[..., 1:2], 1e-30)
+    corr = jnp.exp(bmax - m_final)                          # [B,KV,G,nT]
+    corr_pages = jnp.repeat(corr, pages_per_block, axis=-1)  # [B,KV,G,Sp]
+    probs_g = psums * corr_pages / l_final                  # [B,KV,G,Sp]
+    page_probs = probs_g.sum(axis=(1, 2))[:, :S]            # [B,S]
+    return ctx.reshape(B, H, hd), page_probs
+
+
+# ---------------------------------------------------------------------------
+# Representative page scoring
+# ---------------------------------------------------------------------------
+def page_score(q: jnp.ndarray, rep_min: jnp.ndarray, rep_max: jnp.ndarray,
+               page_mask: jnp.ndarray, scale: float, impl: str = "jnp",
+               block_pages: int = 256) -> jnp.ndarray:
+    """q [B,H,hd]; rep_min/max [B,S,KV,hd]; page_mask [B,S] bool.
+
+    Returns scores [B,S] f32 (-inf at invalid pages).
+    """
+    if impl == "jnp":
+        return ref.page_score_ref(q, rep_min, rep_max, page_mask, scale)
+    from repro.kernels.page_score import page_score_pallas
+
+    B, H, hd = q.shape
+    S, KV = rep_min.shape[1:3]
+    G = H // KV
+    qg = q.reshape(B, KV, G, hd)
+    bS = min(block_pages, S)
+    Sp = _round_up(S, bS)
+    rmin, rmax, mask = rep_min, rep_max, page_mask.astype(jnp.float32)
+    if Sp != S:
+        pad = Sp - S
+        rmin = jnp.pad(rmin, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        rmax = jnp.pad(rmax, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        mask = jnp.pad(mask, ((0, 0), (0, pad)))
+    out = page_score_pallas(qg, rmin, rmax, mask, scale=scale,
+                            block_pages=bS,
+                            interpret=(impl == "pallas_interpret"))
+    return out[:, :S]
+
+
+# ---------------------------------------------------------------------------
+# Flash prefill
+# ---------------------------------------------------------------------------
+def flash_prefill(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                  scale: float, q_offset: int = 0, impl: str = "jnp",
+                  block_q: int = 256, block_k: int = 256) -> jnp.ndarray:
+    """q [B,Sq,H,hd]; k/v [B,Skv,KV,hd] -> ctx [B,Sq,H,hd] (causal).
+
+    impl "jnp" switches to the memory-bounded scan flash (custom VJP)
+    automatically once the kv length would make the naive [Sq, Skv]
+    logits tensor the memory bottleneck; "jnp_naive" forces the oracle.
+    """
+    if impl == "jnp" and k.shape[1] > 1024:
+        impl = "jnp_flash"
+    if impl == "jnp_flash":
+        from repro.kernels.flash_scan import flash_causal
+        return flash_causal(q, k, v, scale, q_offset, block_k)
+    if impl in ("jnp", "jnp_naive"):
+        return ref.flash_prefill_ref(q, k, v, scale, q_offset)
+    from repro.kernels.flash_prefill import flash_prefill_pallas
+
+    B, Sq, H, hd = q.shape
+    Skv, KV = k.shape[1], k.shape[2]
+    qt = q.transpose(0, 2, 1, 3)                   # [B,H,Sq,hd]
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    bQ, bK = min(block_q, Sq), min(block_k, Skv)
+    Sqp, Skvp = _round_up(Sq, bQ), _round_up(Skv, bK)
+    if Sqp != Sq:
+        qt = jnp.pad(qt, ((0, 0), (0, 0), (0, Sqp - Sq), (0, 0)))
+    if Skvp != Skv:
+        kt = jnp.pad(kt, ((0, 0), (0, 0), (0, Skvp - Skv), (0, 0)))
+        vt = jnp.pad(vt, ((0, 0), (0, 0), (0, Skvp - Skv), (0, 0)))
+    out = flash_prefill_pallas(
+        qt, kt, vt, scale=scale, q_offset=q_offset, kv_len=Skv,
+        block_q=bQ, block_k=bK, interpret=(impl == "pallas_interpret"))
+    return out[:, :, :Sq].transpose(0, 2, 1, 3)

@@ -1,0 +1,74 @@
+"""Pallas TPU kernel: Quest-style representative page scoring.
+
+The paper's §3.3 "lightweight step" before the attention kernel: the
+new token's query attends to one representative (min/max channelwise
+bound) per page, producing a single score per page that drives RaaS
+timestamp refresh / Quest top-k selection.
+
+score[s] = max_{kv,g}  sum_d  max(q[kv,g,d]*rep_min[s,kv,d],
+                                  q[kv,g,d]*rep_max[s,kv,d]) * scale
+
+Grid (B, nS): page-block axis is parallel (no accumulation across
+blocks).  VMEM per step: 2*bS*KV*hd f32 rep blocks + KV*G*hd query —
+with bS=256, KV=8, hd=128 that's ~2 MiB.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(scale: float, q_ref, rmin_ref, rmax_ref, valid_ref, out_ref):
+    q = q_ref[0].astype(jnp.float32)               # [KV, G, hd]
+    rmin = rmin_ref[0].astype(jnp.float32)         # [bS, KV, hd]
+    rmax = rmax_ref[0].astype(jnp.float32)
+    valid = valid_ref[0] > 0.5                     # [bS]
+
+    # [KV, G, 1, hd] x [1, 1, bS(via move), hd]
+    qe = q[:, :, None, :]                                   # [KV,G,1,hd]
+    rmin_t = jnp.transpose(rmin, (1, 0, 2))[:, None]        # [KV,1,bS,hd]
+    rmax_t = jnp.transpose(rmax, (1, 0, 2))[:, None]
+    elem = jnp.maximum(qe * rmin_t, qe * rmax_t)            # [KV,G,bS,hd]
+    u = elem.sum(axis=-1) * scale                           # [KV,G,bS]
+    score = u.max(axis=(0, 1))                              # [bS]
+    out_ref[0] = jnp.where(valid, score, NEG_INF)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "block_pages",
+                                             "interpret"))
+def page_score_pallas(qg: jnp.ndarray, rep_min: jnp.ndarray,
+                      rep_max: jnp.ndarray, valid: jnp.ndarray,
+                      scale: float, block_pages: int = 256,
+                      interpret: bool = True) -> jnp.ndarray:
+    """qg [B,KV,G,hd]; rep_min/max [B,S,KV,hd]; valid [B,S] f32 0/1.
+
+    Returns scores [B, S] f32 (-inf at invalid pages).
+    """
+    B, KV, G, hd = qg.shape
+    S = rep_min.shape[1]
+    bS = min(block_pages, S)
+    assert S % bS == 0
+    nS = S // bS
+
+    return pl.pallas_call(
+        functools.partial(_kernel, scale),
+        grid=(B, nS),
+        in_specs=[
+            pl.BlockSpec((1, KV, G, hd), lambda b, s: (b, 0, 0, 0)),
+            pl.BlockSpec((1, bS, KV, hd), lambda b, s: (b, s, 0, 0)),
+            pl.BlockSpec((1, bS, KV, hd), lambda b, s: (b, s, 0, 0)),
+            pl.BlockSpec((1, bS), lambda b, s: (b, s)),
+        ],
+        out_specs=pl.BlockSpec((1, bS), lambda b, s: (b, s)),
+        out_shape=jax.ShapeDtypeStruct((B, S), jnp.float32),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel")),
+        interpret=interpret,
+        name="raas_page_score",
+    )(qg, rep_min, rep_max, valid)

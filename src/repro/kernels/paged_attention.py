@@ -1,0 +1,141 @@
+"""Pallas TPU kernel: single-token paged decode attention (RaaS hot loop).
+
+TPU-native adaptation of the paper's sparse decode step (DESIGN.md §2):
+instead of a CUDA gather + FlashInfer call, we stream page blocks
+HBM->VMEM along a sequential grid axis and accumulate with an online
+softmax in f32 VMEM scratch.  The kernel additionally emits the
+*true* per-page probability mass (needed by the H2O baseline and the
+paper's Fig-6 fidelity metrics) at negligible cost: per-block
+unnormalised exp-sums plus the running row max, fixed up by the ops.py
+wrapper after the final block.
+
+Layout (pre-arranged by ops.py):
+  qg    [B, KV, G, hd]      G = H // KV query heads per kv head
+  kt    [B, KV, T, hd]      T = S * P tokens, page-major
+  vt    [B, KV, T, hd]
+  mask  [B, T]   f32 0/1
+
+Grid (B, KV, nT): first two axes parallel, last sequential (online
+softmax accumulation across token blocks).
+
+Block shapes: token block bT (multiple of page_size P; default 512 =
+32 pages) x full head dim.  VMEM working set per step:
+2*bT*hd*(kv bytes) + G*hd acc + G*bT probs — e.g. bT=512, hd=128, bf16:
+~290 KiB, comfortably inside the ~16 MiB VMEM budget, leaving room for
+double buffering of the K/V streams.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(page_size: int, scale: float,
+            q_ref, k_ref, v_ref, mask_ref,
+            ctx_ref, psum_ref, bmax_ref, ml_ref,
+            m_s, l_s, acc_s):
+    t = pl.program_id(2)
+    nT = pl.num_programs(2)
+
+    @pl.when(t == 0)
+    def _init():
+        m_s[...] = jnp.full_like(m_s, NEG_INF)
+        l_s[...] = jnp.zeros_like(l_s)
+        acc_s[...] = jnp.zeros_like(acc_s)
+
+    q = q_ref[0, 0].astype(jnp.float32)            # [G, hd]
+    k = k_ref[0, 0].astype(jnp.float32)            # [bT, hd]
+    v = v_ref[0, 0].astype(jnp.float32)            # [bT, hd]
+    mask = mask_ref[0] > 0.5                       # [bT]
+
+    logits = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * scale          # [G, bT]
+    logits = jnp.where(mask[None, :], logits, NEG_INF)
+
+    m_prev = m_s[...]                              # [G]
+    m_new = jnp.maximum(m_prev, logits.max(axis=-1))
+    corr = jnp.exp(m_prev - m_new)
+    p = jnp.where(mask[None, :], jnp.exp(logits - m_new[:, None]), 0.0)
+
+    l_s[...] = l_s[...] * corr + p.sum(axis=-1)
+    acc_s[...] = acc_s[...] * corr[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_s[...] = m_new
+
+    # per-page unnormalised exp sums under this block's running max
+    bT = p.shape[-1]
+    psum_ref[0, 0] = p.reshape(p.shape[0], bT // page_size,
+                               page_size).sum(axis=-1)        # [G, pages]
+    bmax_ref[0, 0, :, 0] = m_new
+
+    @pl.when(t == nT - 1)
+    def _fin():
+        denom = jnp.maximum(l_s[...], 1e-30)
+        ctx_ref[0, 0] = (acc_s[...] / denom[:, None]).astype(ctx_ref.dtype)
+        ml_ref[0, 0, :, 0] = m_s[...]
+        ml_ref[0, 0, :, 1] = l_s[...]
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "page_size",
+                                             "block_tokens", "interpret"))
+def paged_decode_attention_pallas(qg: jnp.ndarray, kt: jnp.ndarray,
+                                  vt: jnp.ndarray, mask: jnp.ndarray,
+                                  scale: float, page_size: int,
+                                  block_tokens: int = 512,
+                                  interpret: bool = True):
+    """Raw kernel entry.  See ops.paged_decode_attention for the public API.
+
+    Returns (ctx [B,KV,G,hd], psums [B,KV,G,S], bmax [B,KV,G,nT],
+    ml [B,KV,G,2]) — psums/bmax/ml are the online-softmax bookkeeping
+    the wrapper uses to reconstruct true page probabilities.
+    """
+    B, KV, G, hd = qg.shape
+    T = kt.shape[2]
+    bT = min(block_tokens, T)
+    assert T % bT == 0 and bT % page_size == 0
+    nT = T // bT
+    S = T // page_size
+    pages_per_block = bT // page_size
+
+    grid = (B, KV, nT)
+    kernel = functools.partial(_kernel, page_size, scale)
+    out_shape = (
+        jax.ShapeDtypeStruct((B, KV, G, hd), qg.dtype),
+        jax.ShapeDtypeStruct((B, KV, G, S), jnp.float32),
+        jax.ShapeDtypeStruct((B, KV, G, nT), jnp.float32),
+        jax.ShapeDtypeStruct((B, KV, G, 2), jnp.float32),
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, G, hd), lambda b, k, t: (b, k, 0, 0)),
+            pl.BlockSpec((1, 1, bT, hd), lambda b, k, t: (b, k, t, 0)),
+            pl.BlockSpec((1, 1, bT, hd), lambda b, k, t: (b, k, t, 0)),
+            pl.BlockSpec((1, bT), lambda b, k, t: (b, t)),
+        ],
+        out_specs=(
+            pl.BlockSpec((1, 1, G, hd), lambda b, k, t: (b, k, 0, 0)),
+            pl.BlockSpec((1, 1, G, pages_per_block),
+                         lambda b, k, t: (b, k, 0, t)),
+            pl.BlockSpec((1, 1, G, 1), lambda b, k, t: (b, k, 0, t)),
+            pl.BlockSpec((1, 1, G, 2), lambda b, k, t: (b, k, 0, 0)),
+        ),
+        scratch_shapes=[
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G, hd), jnp.float32),
+        ],
+        out_shape=out_shape,
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+        name="raas_paged_decode_attention",
+    )(qg, kt, vt, mask)

@@ -1,0 +1,101 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the semantic ground truth: each kernel in ``ops.py`` must be
+allclose to the function of the same name here for every shape/dtype in
+the test sweep.  They are also the CPU fast path used by the rest of
+the framework (``impl='jnp'``).
+
+Shapes (decode):
+  q          [B, H, hd]           one new query token per sequence
+  k_pages    [B, S, P, KV, hd]    S slots of P tokens each
+  v_pages    [B, S, P, KV, hd]
+  token_mask [B, S, P]  bool      which cached token positions are live
+  rep_min    [B, S, KV, hd]       channelwise min of keys in the page
+  rep_max    [B, S, KV, hd]
+
+GQA: H query heads map onto KV kv-heads in contiguous groups of
+G = H // KV.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_NEG_INF = -1e30
+
+
+def paged_decode_attention_ref(q: jnp.ndarray, k_pages: jnp.ndarray,
+                               v_pages: jnp.ndarray, token_mask: jnp.ndarray,
+                               scale: float):
+    """Single-token paged attention.
+
+    Returns ``(ctx [B, H, hd], page_probs [B, S])`` where ``page_probs``
+    is the true post-softmax probability mass per page, summed over all
+    query heads (consumed by the H2O policy).
+    """
+    B, H, hd = q.shape
+    S, P, KV = k_pages.shape[1:4]
+    G = H // KV
+    qg = q.reshape(B, KV, G, hd).astype(jnp.float32)
+    k = k_pages.astype(jnp.float32)
+    v = v_pages.astype(jnp.float32)
+    logits = jnp.einsum("bkgd,bspkd->bkgsp", qg, k) * scale
+    mask = token_mask[:, None, None, :, :]
+    logits = jnp.where(mask, logits, _NEG_INF)
+    flat = logits.reshape(B, KV, G, S * P)
+    m = jnp.max(flat, axis=-1, keepdims=True)
+    e = jnp.exp(flat - m)
+    e = jnp.where(flat <= _NEG_INF / 2, 0.0, e)
+    denom = jnp.sum(e, axis=-1, keepdims=True)
+    probs = (e / jnp.maximum(denom, 1e-30)).reshape(B, KV, G, S, P)
+    ctx = jnp.einsum("bkgsp,bspkd->bkgd", probs, v)
+    page_probs = probs.sum(axis=(1, 2, 4))  # sum over kv-heads, groups, in-page
+    return ctx.reshape(B, H, hd).astype(q.dtype), page_probs
+
+
+def page_score_ref(q: jnp.ndarray, rep_min: jnp.ndarray, rep_max: jnp.ndarray,
+                   page_mask: jnp.ndarray, scale: float) -> jnp.ndarray:
+    """Quest-style representative page scores.
+
+    Per query head h and page s:  u_hs = sum_d max(q_d*min_d, q_d*max_d)
+    (an upper bound on any in-page token's logit).  The per-page score
+    is the max over all query heads, scaled like a logit.  Invalid pages
+    get -inf.  Returns [B, S] f32.
+    """
+    B, H, hd = q.shape
+    S, KV = rep_min.shape[1:3]
+    G = H // KV
+    qg = q.reshape(B, KV, G, hd).astype(jnp.float32)
+    # the bound takes the elementwise max *before* the channel sum
+    qe = qg[:, :, :, None, :]                                   # [B,KV,G,1,hd]
+    rmin = rep_min.astype(jnp.float32).transpose(0, 2, 1, 3)    # [B,KV,S,hd]
+    rmax = rep_max.astype(jnp.float32).transpose(0, 2, 1, 3)
+    elem = jnp.maximum(qe * rmin[:, :, None], qe * rmax[:, :, None])
+    u = elem.sum(-1) * scale                                    # [B,KV,G,S]
+    score = u.max(axis=(1, 2))                                  # [B,S]
+    return jnp.where(page_mask, score, _NEG_INF)
+
+
+def flash_prefill_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                      scale: float, q_offset: int = 0) -> jnp.ndarray:
+    """Causal full attention for the prefill stage.
+
+    q [B, Sq, H, hd], k/v [B, Skv, KV, hd] -> [B, Sq, H, hd].
+    ``q_offset`` places the query block at absolute position offset
+    within the kv sequence (for chunked prefill).
+    """
+    B, Sq, H, hd = q.shape
+    Skv, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, Sq, KV, G, hd).astype(jnp.float32)
+    logits = jnp.einsum("bqkgd,bskd->bkgqs", qg, k.astype(jnp.float32)) * scale
+    qpos = jnp.arange(Sq) + q_offset
+    kpos = jnp.arange(Skv)
+    causal = qpos[:, None] >= kpos[None, :]
+    logits = jnp.where(causal[None, None, None], logits, _NEG_INF)
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    e = jnp.exp(logits - m)
+    e = jnp.where(logits <= _NEG_INF / 2, 0.0, e)
+    probs = e / jnp.maximum(e.sum(-1, keepdims=True), 1e-30)
+    ctx = jnp.einsum("bkgqs,bskd->bqkgd", probs, v.astype(jnp.float32))
+    return ctx.reshape(B, Sq, H, hd).astype(q.dtype)

@@ -1,0 +1,111 @@
+"""Sequential driver for the full dry-run matrix.
+
+Spawns one subprocess per (arch x shape x mesh [x policy]) so each run
+gets a fresh jax with 512 forced host devices.  Writes one JSON per
+combo under experiments/dryrun/ and a rolling summary CSV.
+
+Order: all 40 single-pod baselines first (the roofline table), then the
+40 multi-pod proofs, then dense-baseline decode variants.
+"""
+from __future__ import annotations
+
+import argparse
+import csv
+import json
+import os
+import subprocess
+import sys
+import time
+
+ARCHS = [
+    "smollm-360m", "olmoe-1b-7b", "mamba2-780m", "musicgen-medium",
+    "paligemma-3b", "qwen25-math-7b", "qwen3-8b", "internlm2-20b",
+    "yi-34b", "jamba-1.5-large-398b", "kimi-k2-1t-a32b",
+]
+SHAPES = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def combos(include_extras: bool):
+    for mesh in ("single", "multi"):
+        for arch in ARCHS:
+            for shape in SHAPES:
+                yield arch, shape, mesh, "raas"
+    if include_extras:
+        # dense decode baselines (paper comparison rows), single-pod
+        for arch in ARCHS:
+            yield arch, "decode_32k", "single", "dense"
+            yield arch, "decode_32k", "single", "quest"
+
+
+def main() -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("--outdir", default="experiments/dryrun")
+    p.add_argument("--timeout", type=int, default=3600)
+    p.add_argument("--extras", action="store_true")
+    p.add_argument("--only-missing", action="store_true", default=True)
+    args = p.parse_args()
+
+    os.makedirs(args.outdir, exist_ok=True)
+    results = []
+    for arch, shape, mesh, policy in combos(args.extras):
+        tag = f"{arch}_{shape}_{mesh}" + (
+            f"_{policy}" if policy != "raas" else "")
+        out = os.path.join(args.outdir, tag + ".json")
+        if args.only_missing and os.path.exists(out):
+            with open(out) as f:
+                rec = json.load(f)
+            results.append(rec)
+            continue
+        t0 = time.time()
+        cmd = [sys.executable, "-m", "repro.launch.dryrun",
+               "--arch", arch, "--shape", shape, "--mesh", mesh,
+               "--policy", policy, "--out", out]
+        print(f"[{time.strftime('%H:%M:%S')}] {tag} ...", flush=True)
+        try:
+            r = subprocess.run(cmd, capture_output=True, text=True,
+                               timeout=args.timeout)
+            if r.returncode != 0:
+                rec = {"arch": arch, "shape": shape, "mesh": mesh,
+                       "policy": policy, "status": "FAIL",
+                       "error": r.stderr[-2000:]}
+                with open(out, "w") as f:
+                    json.dump(rec, f, indent=2)
+                print(f"   FAIL ({time.time()-t0:.0f}s): "
+                      f"{r.stderr.splitlines()[-1] if r.stderr else '?'}",
+                      flush=True)
+            else:
+                with open(out) as f:
+                    rec = json.load(f)
+                print(f"   ok ({time.time()-t0:.0f}s) "
+                      f"dominant={rec.get('dominant')}", flush=True)
+        except subprocess.TimeoutExpired:
+            rec = {"arch": arch, "shape": shape, "mesh": mesh,
+                   "policy": policy, "status": "TIMEOUT"}
+            with open(out, "w") as f:
+                json.dump(rec, f, indent=2)
+            print(f"   TIMEOUT ({args.timeout}s)", flush=True)
+        results.append(rec)
+
+    # summary CSV
+    with open(os.path.join(args.outdir, "summary.csv"), "w",
+              newline="") as f:
+        w = csv.writer(f)
+        w.writerow(["arch", "shape", "mesh", "policy", "status",
+                    "compile_s", "flops_per_device", "bytes_per_device",
+                    "coll_bytes_per_device", "compute_s", "memory_s",
+                    "collective_s", "dominant"])
+        for r in results:
+            t = r.get("roofline", {})
+            w.writerow([r.get("arch"), r.get("shape"), r.get("mesh"),
+                        r.get("policy"), r.get("status"),
+                        r.get("compile_s"), r.get("flops_per_device"),
+                        r.get("bytes_per_device"),
+                        r.get("collective_bytes_per_device"),
+                        t.get("compute_s"), t.get("memory_s"),
+                        t.get("collective_s"), r.get("dominant")])
+    n_ok = sum(1 for r in results if r.get("status") == "ok")
+    print(f"done: {n_ok}/{len(results)} ok")
+
+
+if __name__ == "__main__":
+    main()

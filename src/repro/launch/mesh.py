@@ -1,0 +1,24 @@
+"""Production mesh construction (TPU v5e 16x16 pod; 2-pod multi-pod).
+
+``make_production_mesh`` is a FUNCTION (not a module constant) so
+importing this module never touches jax device state — the dry-run
+must set XLA_FLAGS before any jax initialization.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def batch_axes(multi_pod: bool):
+    return ("pod", "data") if multi_pod else ("data",)
+
+
+def make_debug_mesh(data: int = 2, model: int = 2):
+    """Small host-device mesh for tests (requires forced host devices)."""
+    return jax.make_mesh((data, model), ("data", "model"))

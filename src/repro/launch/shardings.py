@@ -1,0 +1,200 @@
+"""PartitionSpec rules for every parameter / state leaf, per arch.
+
+Megatron-style tensor parallelism on the "model" axis with an FSDP-
+style secondary shard on the "data" axis (largest remaining divisible
+dim), applied by *name suffix* rules over the params pytree.  Block
+parameters carry a leading [n_periods] scan-stack dim which the rules
+skip automatically.
+
+Two modes:
+  * "train"  — attention projections sharded on the *head* dim where
+    divisible (column-parallel QKV / row-parallel O), else row-parallel
+    on d_model.
+  * "decode" — attention projections and the paged KV cache sharded on
+    *head_dim* (hd is a multiple of 16 for every assigned arch, unlike
+    head counts), so the decode cache memory splits across the model
+    axis without gather traffic on the page dim.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.config import ModelConfig
+
+
+def _divisible(n: int, k: int) -> bool:
+    return k > 0 and n % k == 0
+
+
+def _with_fsdp(spec: list, shape: Tuple[int, ...], data_size: int,
+               fsdp: bool) -> list:
+    """Assign ("data",) to the largest unsharded dim divisible by data."""
+    if not fsdp or "data" in spec:
+        return spec
+    cands = [(shape[i], i) for i in range(len(shape))
+             if spec[i] is None and _divisible(shape[i], data_size)]
+    if cands:
+        _, i = max(cands)
+        spec[i] = "data"
+    return spec
+
+
+def param_pspec(path: str, shape: Tuple[int, ...], cfg: ModelConfig,
+                mode: str, model_size: int, data_size: int,
+                fsdp: bool = False) -> P:
+    """Rule table.  ``path`` is '/'-joined key path of the leaf."""
+    name = path.split("/")[-1]
+    # strip scan-stack leading dim for blocks
+    stacked = path.startswith("blocks")
+    base_shape = shape[1:] if stacked else shape
+    nd = len(base_shape)
+    spec: list = [None] * nd
+    m = model_size
+
+    def set_if(i, size):
+        if _divisible(size, m):
+            spec[i] = "model"
+            return True
+        return False
+
+    if name == "embed":                      # [C, V, D]
+        set_if(1, base_shape[1]) or set_if(2, base_shape[2])
+    elif name == "lm_head":                  # [D, C, V]
+        set_if(2, base_shape[2]) or set_if(0, base_shape[0])
+    elif name in ("wq", "wk", "wv"):         # [D, H|KV, hd]
+        if mode == "decode":
+            set_if(2, base_shape[2]) or set_if(0, base_shape[0])
+        else:
+            set_if(1, base_shape[1]) or set_if(0, base_shape[0])
+    elif name == "wo":                       # [H, hd, D]
+        if mode == "decode":
+            set_if(1, base_shape[1]) or set_if(2, base_shape[2])
+        else:
+            set_if(0, base_shape[0]) or set_if(2, base_shape[2])
+    elif name in ("w_gate", "w_up"):
+        if nd == 2:                          # dense ffn [D, F]
+            set_if(1, base_shape[1])
+        else:                                # moe [E, D, F]
+            set_if(0, base_shape[0]) or set_if(2, base_shape[2])
+            # FSDP on the hidden dim F (column-parallel w.r.t. the
+            # dispatch buffer) — sharding D instead collides with the
+            # [E, C:data, D] dispatch layout and forces full-buffer
+            # all-gathers (§Perf kimi it1, refuted hypothesis).
+            if fsdp and spec[2] is None and _divisible(base_shape[2],
+                                                       data_size):
+                spec[2] = "data"
+    elif name == "w_down":
+        if nd == 2:                          # [F, D]
+            set_if(0, base_shape[0])
+        else:                                # [E, F, D]
+            set_if(0, base_shape[0]) or set_if(1, base_shape[1])
+            if fsdp and spec[1] is None and _divisible(base_shape[1],
+                                                       data_size):
+                spec[1] = "data"             # row-parallel on F
+    elif name == "router":                   # [D, E]
+        set_if(1, base_shape[1])
+    elif name in ("in_z", "in_x"):           # [D, d_in]
+        set_if(1, base_shape[1])
+    elif name == "in_dt":                    # [D, H]
+        set_if(1, base_shape[1])
+    elif name == "out_proj":                 # [d_in, D]
+        set_if(0, base_shape[0])
+    elif name in ("conv_x_w", "conv_x_b"):   # [d_conv, d_in] / [d_in]
+        set_if(nd - 1, base_shape[-1])
+    elif name in ("A_log", "D_skip", "dt_bias"):  # [H]
+        set_if(0, base_shape[0])
+    elif name == "scale" and "mamba" in path and "norm" in path:
+        set_if(0, base_shape[0])             # [d_in] matches hidden shard
+    # everything else (norms, in_B/in_C, conv_B/C, biases): replicated
+
+    spec = _with_fsdp(spec, base_shape, data_size, fsdp)
+    if stacked:
+        spec = [None] + spec
+    return P(*spec)
+
+
+def params_shardings(params, cfg: ModelConfig, mesh: Mesh, mode: str,
+                     fsdp: bool = False):
+    """Tree of NamedShardings matching ``params``."""
+    model_size = mesh.shape["model"]
+    data_size = mesh.shape["data"]
+
+    def one(path, leaf):
+        keys = []
+        for p in path:
+            if hasattr(p, "key"):
+                keys.append(str(p.key))
+            elif hasattr(p, "idx"):
+                keys.append(str(p.idx))
+            else:
+                keys.append(str(p))
+        ps = param_pspec("/".join(keys), leaf.shape, cfg, mode,
+                         model_size, data_size, fsdp)
+        return NamedSharding(mesh, ps)
+
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+# ---------------------------------------------------------------------------
+# Cache / activation shardings (decode)
+# ---------------------------------------------------------------------------
+def cache_pspec(path: str, shape: Tuple[int, ...], batch: int,
+                batch_axes: Tuple[str, ...], mesh: Mesh,
+                model_size: int) -> P:
+    """Paged-cache and mamba-state leaves.
+
+    Leaves carry a leading [n_periods] stack dim, then batch.  KV pages
+    [.., B, S, P, KV, hd] shard batch over data axes and hd over model;
+    mamba ssm [.., B, H, P, N] shards heads over model.
+    """
+    name = path.split("/")[-1]
+    bsz = 1
+    for a in batch_axes:
+        bsz *= mesh.shape[a]
+    bspec = batch_axes if _divisible(batch, bsz) else None
+    nd = len(shape)
+    spec: list = [None] * nd
+    # leaves are stacked [n_periods, B, ...] — batch is dim 1
+    if nd >= 2:
+        spec[1] = bspec
+    if name in ("k_pages", "v_pages", "rep_min", "rep_max") \
+            and _divisible(shape[-1], model_size):
+        spec[-1] = "model"                   # head_dim
+    elif name == "ssm" and nd >= 3 and _divisible(shape[2], model_size):
+        spec[2] = "model"                    # heads
+    elif name == "conv_x" and _divisible(shape[-1], model_size):
+        spec[-1] = "model"                   # d_inner
+    return P(*spec)
+
+
+def cache_shardings(cache, batch: int, mesh: Mesh,
+                    batch_axes: Tuple[str, ...]):
+    model_size = mesh.shape["model"]
+
+    def one(path, leaf):
+        keys = []
+        for p in path:
+            if hasattr(p, "key"):
+                keys.append(str(p.key))
+            elif hasattr(p, "idx"):
+                keys.append(str(p.idx))
+            else:
+                keys.append(str(p))
+        ps = cache_pspec("/".join(keys), leaf.shape, batch, batch_axes,
+                         mesh, model_size)
+        return NamedSharding(mesh, ps)
+
+    return jax.tree_util.tree_map_with_path(one, cache)
+
+
+def batch_sharding(mesh: Mesh, batch: int, batch_axes: Tuple[str, ...],
+                   ndim: int) -> NamedSharding:
+    bsz = 1
+    for a in batch_axes:
+        bsz *= mesh.shape[a]
+    spec = [batch_axes if batch % bsz == 0 else None] + [None] * (ndim - 1)
+    return NamedSharding(mesh, P(*spec))

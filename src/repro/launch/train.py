@@ -1,0 +1,119 @@
+"""Distributed training driver: train_step factory + CLI loop.
+
+``make_train_step`` builds the jittable (params, opt, batch) -> update
+closure used by the CLI here, the dry-run lowering, the smoke tests and
+the end-to-end example — one definition everywhere.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig, RunConfig, get_config
+from repro.models import model as M
+from repro.optim import adamw
+
+
+def make_train_step(cfg: ModelConfig, run: RunConfig,
+                    impl: str = "jnp", capacity_factor: float = 1.25):
+    """Returns train_step(params, opt_state, batch) -> (params', opt', metrics).
+
+    batch: {"tokens": [B, T(,C)] i32, "loss_mask": [B, T] f32,
+            optional "prefix_emb": [B, n_prefix, D]}.
+    """
+    n_prefix = cfg.n_prefix_tokens if cfg.frontend else 0
+
+    def train_step(params, opt_state, batch):
+        tokens = batch["tokens"]
+        mask = batch["loss_mask"]
+        prefix = batch.get("prefix_emb")
+
+        def loss_f(p):
+            logits, aux = M.forward_train(
+                p, cfg, tokens, prefix_emb=prefix, impl=impl,
+                remat=run.remat, capacity_factor=capacity_factor)
+            logits = logits[:, n_prefix:]
+            loss = M.loss_fn(logits[:, :-1], tokens[:, 1:], mask[:, 1:])
+            return loss + aux, (loss, aux)
+
+        grads, (loss, aux) = jax.grad(loss_f, has_aux=True)(params)
+        grads, gnorm = adamw.clip_by_global_norm(grads, run.clip_norm)
+        lr = adamw.cosine_schedule(opt_state.step, run.lr,
+                                   run.warmup_steps, run.total_steps)
+        params, opt_state = adamw.update(params, grads, opt_state, lr,
+                                         weight_decay=run.weight_decay)
+        metrics = {"loss": loss, "aux": aux, "gnorm": gnorm, "lr": lr}
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_eval_step(cfg: ModelConfig, impl: str = "jnp"):
+    n_prefix = cfg.n_prefix_tokens if cfg.frontend else 0
+
+    def eval_step(params, batch):
+        logits, _ = M.forward_train(params, cfg, batch["tokens"],
+                                    prefix_emb=batch.get("prefix_emb"),
+                                    impl=impl, remat=False)
+        logits = logits[:, n_prefix:]
+        return M.loss_fn(logits[:, :-1], batch["tokens"][:, 1:],
+                         batch["loss_mask"][:, 1:])
+
+    return eval_step
+
+
+def main(argv=None) -> None:
+    from repro.data.pipeline import DataConfig, batches
+
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", default="smollm-360m")
+    p.add_argument("--steps", type=int, default=50)
+    p.add_argument("--batch", type=int, default=8)
+    p.add_argument("--seq", type=int, default=256)
+    p.add_argument("--reduced", action="store_true",
+                   help="train the reduced (smoke) variant of --arch")
+    p.add_argument("--lr", type=float, default=3e-4)
+    p.add_argument("--ckpt", default="")
+    args = p.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    run = RunConfig(arch=args.arch, lr=args.lr, total_steps=args.steps,
+                    warmup_steps=max(1, args.steps // 10))
+    dc = DataConfig(vocab_size=cfg.vocab_size, seq_len=args.seq)
+
+    params = M.init_params(jax.random.PRNGKey(run.seed), cfg)
+    opt_state = adamw.init(params)
+    step_fn = jax.jit(make_train_step(cfg, run))
+
+    it = batches(dc, args.batch)
+    t0 = time.time()
+    for step in range(args.steps):
+        b = next(it)
+        batch = {"tokens": jnp.asarray(b["tokens"]),
+                 "loss_mask": jnp.asarray(b["loss_mask"])}
+        if cfg.frontend:
+            batch["prefix_emb"] = jnp.zeros(
+                (args.batch, cfg.n_prefix_tokens, cfg.d_model))
+        if cfg.n_codebooks > 1:
+            batch["tokens"] = jnp.repeat(batch["tokens"][..., None],
+                                         cfg.n_codebooks, axis=-1)
+        params, opt_state, m = step_fn(params, opt_state, batch)
+        if step % 10 == 0 or step == args.steps - 1:
+            print(f"step {step:4d} loss {float(m['loss']):.4f} "
+                  f"gnorm {float(m['gnorm']):.3f} lr {float(m['lr']):.2e} "
+                  f"({time.time() - t0:.1f}s)")
+    if args.ckpt:
+        from repro.checkpoint import ckpt
+        ckpt.save(f"{args.ckpt}/{args.steps}.msgpack",
+                  {"params": params})
+        print("saved", args.ckpt)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,148 @@
+"""Transformer blocks: mixer (attention | mamba) + FFN (dense | moe | none).
+
+Three execution paths per block:
+  * ``block_train``   — full-sequence causal, no cache (training).
+  * ``block_prefill`` — full-sequence causal + ingest KV into the paged
+    cache / capture mamba state (serving, stage 1).
+  * ``block_decode``  — one token, policy-aware sparse attention via
+    core.attention.decode_attend (serving, stage 2 — the paper's loop).
+
+Pre-norm residual wiring: h += mixer(norm(h)); h += ffn(norm(h)).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ATTN, MAMBA, FFN_DENSE, FFN_MOE, ModelConfig, RaasConfig
+from repro.core import attention as core_attention
+from repro.core import paged_cache as pc
+from repro.kernels import ops
+from repro.models import layers, mamba2, moe
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+def init_block(key, cfg: ModelConfig, mixer: str, ffn_kind: str,
+               dtype) -> dict:
+    km, kf = jax.random.split(key)
+    p = {"norm_mixer": layers.init_rmsnorm(cfg.d_model, dtype)}
+    if mixer == ATTN:
+        p["attn"] = layers.init_attn(km, cfg, dtype)
+    else:
+        p["mamba"] = mamba2.init_mamba(km, cfg.d_model, cfg.mamba, dtype)
+    if ffn_kind != "none":
+        p["norm_ffn"] = layers.init_rmsnorm(cfg.d_model, dtype)
+        if ffn_kind == FFN_DENSE:
+            p["ffn"] = layers.init_ffn(kf, cfg.d_model, cfg.d_ff, dtype)
+        else:
+            p["moe"] = moe.init_moe(kf, cfg.d_model, cfg.moe, dtype)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# FFN sub-step (shared by all paths)
+# ---------------------------------------------------------------------------
+def _ffn_step(params: dict, cfg: ModelConfig, h: jnp.ndarray,
+              ffn_kind: str, capacity_factor: float) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    aux = jnp.zeros((), jnp.float32)
+    if ffn_kind == "none":
+        return h, aux
+    hn = layers.rmsnorm(params["norm_ffn"], h, cfg.norm_eps)
+    if ffn_kind == FFN_DENSE:
+        out = layers.ffn(params["ffn"], hn)
+    else:
+        out, aux = moe.moe_ffn(params["moe"], hn, cfg.moe,
+                               capacity_factor=capacity_factor)
+    return h + out, aux
+
+
+# ---------------------------------------------------------------------------
+# Train path (also the no-cache forward used by tests/benchmarks)
+# ---------------------------------------------------------------------------
+def block_train(params: dict, cfg: ModelConfig, h: jnp.ndarray,
+                positions: jnp.ndarray, mixer: str, ffn_kind: str,
+                impl: str = "jnp",
+                capacity_factor: float = 1.25) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """h [B, T, D], positions [B, T] -> (h', aux_loss)."""
+    hn = layers.rmsnorm(params["norm_mixer"], h, cfg.norm_eps)
+    if mixer == ATTN:
+        q, k, v = layers.qkv_project(params["attn"], cfg, hn, positions)
+        scale = 1.0 / (cfg.resolved_head_dim ** 0.5)
+        ctx = ops.flash_prefill(q, k, v, scale, impl=impl)
+        h = h + layers.attn_output(params["attn"], ctx)
+    else:
+        h = h + mamba2.mamba_forward(params["mamba"], hn, cfg.mamba,
+                                     cfg.d_model, cfg.norm_eps)
+    return _ffn_step(params, cfg, h, ffn_kind, capacity_factor)
+
+
+# ---------------------------------------------------------------------------
+# Serving: prefill + decode
+# ---------------------------------------------------------------------------
+class BlockCache(NamedTuple):
+    """Per-block serving state; exactly one field is meaningful."""
+
+    attn: Optional[pc.PagedCache]
+    mamba: Optional[mamba2.MambaState]
+
+
+def init_block_cache(cfg: ModelConfig, mixer: str, spec: pc.CacheSpec,
+                     batch: int, dtype) -> BlockCache:
+    if mixer == ATTN:
+        return BlockCache(attn=pc.init_cache(spec, batch), mamba=None)
+    return BlockCache(attn=None,
+                      mamba=mamba2._init_state(batch, cfg.d_model,
+                                               cfg.mamba, dtype))
+
+
+def block_prefill(params: dict, cfg: ModelConfig, h: jnp.ndarray,
+                  positions: jnp.ndarray, lengths: jnp.ndarray,
+                  cache: BlockCache, mixer: str, ffn_kind: str,
+                  impl: str = "jnp",
+                  capacity_factor: float = 2.0
+                  ) -> Tuple[jnp.ndarray, BlockCache, jnp.ndarray]:
+    """Full-sequence forward + state capture.  Returns (h', cache', aux)."""
+    hn = layers.rmsnorm(params["norm_mixer"], h, cfg.norm_eps)
+    if mixer == ATTN:
+        q, k, v = layers.qkv_project(params["attn"], cfg, hn, positions)
+        scale = 1.0 / (cfg.resolved_head_dim ** 0.5)
+        ctx = ops.flash_prefill(q, k, v, scale, impl=impl)
+        h = h + layers.attn_output(params["attn"], ctx)
+        cache = cache._replace(
+            attn=pc.ingest_prefill(cache.attn, k, v, lengths))
+    else:
+        out, mstate = mamba2.mamba_forward(
+            params["mamba"], hn, cfg.mamba, cfg.d_model, cfg.norm_eps,
+            return_state=True)
+        h = h + out
+        cache = cache._replace(mamba=mstate)
+    h, aux = _ffn_step(params, cfg, h, ffn_kind, capacity_factor)
+    return h, cache, aux
+
+
+def block_decode(params: dict, cfg: ModelConfig, h: jnp.ndarray,
+                 pos: jnp.ndarray, cache: BlockCache, mixer: str,
+                 ffn_kind: str, raas: RaasConfig, impl: str = "jnp",
+                 capacity_factor: float = 4.0
+                 ) -> Tuple[jnp.ndarray, BlockCache]:
+    """One-token step.  h [B, D], pos [B] -> (h', cache')."""
+    hn = layers.rmsnorm(params["norm_mixer"], h, cfg.norm_eps)
+    if mixer == ATTN:
+        q, k, v = layers.qkv_project(
+            params["attn"], cfg, hn[:, None], pos[:, None])
+        new_cache, ctx, _stats = core_attention.decode_attend(
+            cache.attn, q[:, 0], k[:, 0], v[:, 0], raas, impl=impl)
+        h = h + layers.attn_output(params["attn"], ctx[:, None])[:, 0]
+        cache = cache._replace(attn=new_cache)
+    else:
+        out, mstate = mamba2.mamba_step(params["mamba"], hn, cache.mamba,
+                                        cfg.mamba, cfg.d_model, cfg.norm_eps)
+        h = h + out
+        cache = cache._replace(mamba=mstate)
+    h, _aux = _ffn_step(params, cfg, h[:, None], ffn_kind,
+                        capacity_factor)
+    return h[:, 0], cache

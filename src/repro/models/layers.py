@@ -1,0 +1,123 @@
+"""Foundational layers: RMSNorm, RoPE, SwiGLU, GQA projections.
+
+Pure-function style: each layer has ``init_<name>(key, cfg, ...) ->
+params-dict`` and ``<name>(params, x, ...) -> y``.  Params are plain
+dicts of jnp arrays so the whole model is a pytree that pjit can shard
+with NamedSharding rules keyed on path names (see launch/shardings.py).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+
+
+# ---------------------------------------------------------------------------
+# Init helpers
+# ---------------------------------------------------------------------------
+def dense_init(key, shape, dtype, scale: float = 1.0):
+    """Truncated-normal fan-in init."""
+    import math
+    fan_in = shape[0] if len(shape) <= 2 else math.prod(shape[:-1])
+    std = scale / max(fan_in, 1) ** 0.5
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * std).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+def init_rmsnorm(dim: int, dtype) -> dict:
+    return {"scale": jnp.ones((dim,), dtype)}
+
+
+def rmsnorm(params: dict, x: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * params["scale"].astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    """Inverse frequencies, shape [head_dim // 2], f32."""
+    exponent = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta ** exponent)
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray,
+               theta: float) -> jnp.ndarray:
+    """Rotate ``x [..., seq, heads, head_dim]`` by ``positions [..., seq]``.
+
+    Uses the split-halves convention (llama/HF "rotate_half").
+    """
+    head_dim = x.shape[-1]
+    inv = rope_freqs(head_dim, theta)                      # [hd/2]
+    ang = positions[..., None].astype(jnp.float32) * inv   # [..., seq, hd/2]
+    cos = jnp.cos(ang)[..., None, :]                       # [..., seq, 1, hd/2]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Gated FFN (SwiGLU)
+# ---------------------------------------------------------------------------
+def init_ffn(key, d_model: int, d_ff: int, dtype) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(k1, (d_model, d_ff), dtype),
+        "w_up": dense_init(k2, (d_model, d_ff), dtype),
+        "w_down": dense_init(k3, (d_ff, d_model), dtype),
+    }
+
+
+def ffn(params: dict, x: jnp.ndarray) -> jnp.ndarray:
+    gate = jnp.einsum("...d,df->...f", x, params["w_gate"])
+    up = jnp.einsum("...d,df->...f", x, params["w_up"])
+    act = jax.nn.silu(gate.astype(jnp.float32)).astype(x.dtype) * up
+    return jnp.einsum("...f,fd->...d", act, params["w_down"])
+
+
+# ---------------------------------------------------------------------------
+# Attention projections (GQA, optional per-head q/k RMSNorm a la Qwen3)
+# ---------------------------------------------------------------------------
+def init_attn(key, cfg: ModelConfig, dtype) -> dict:
+    hd = cfg.resolved_head_dim
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(kq, (cfg.d_model, cfg.n_heads, hd), dtype),
+        "wk": dense_init(kk, (cfg.d_model, cfg.n_kv_heads, hd), dtype),
+        "wv": dense_init(kv, (cfg.d_model, cfg.n_kv_heads, hd), dtype),
+        "wo": dense_init(ko, (cfg.n_heads, hd, cfg.d_model), dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = init_rmsnorm(hd, dtype)
+        p["k_norm"] = init_rmsnorm(hd, dtype)
+    return p
+
+
+def qkv_project(params: dict, cfg: ModelConfig, x: jnp.ndarray,
+                positions: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """x [B, S, D] -> q [B, S, H, hd], k/v [B, S, KV, hd], RoPE applied."""
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"])
+    if cfg.qk_norm:
+        q = rmsnorm(params["q_norm"], q, cfg.norm_eps)
+        k = rmsnorm(params["k_norm"], k, cfg.norm_eps)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def attn_output(params: dict, ctx: jnp.ndarray) -> jnp.ndarray:
+    """ctx [B, S, H, hd] -> [B, S, D]."""
+    return jnp.einsum("bshk,hkd->bsd", ctx, params["wo"])

@@ -1,0 +1,225 @@
+"""Mamba2 mixer via SSD (state-space duality), train + decode paths.
+
+Train/prefill uses the chunked SSD algorithm [arXiv:2405.21060]:
+intra-chunk quadratic term + inter-chunk recurrence over chunk states.
+Decode is the O(1) recurrent step on (conv, ssm) state — this is why
+RaaS is inapplicable here (DESIGN.md §Arch-applicability): there is no
+KV cache to sparsify, the state is already constant-size.
+
+Projections are kept *unfused* (separate z / x / B / C / dt weights and
+per-stream depthwise convs) so each parameter shards cleanly: x/z
+streams and heads on the "model" axis, group-shared B/C replicated.
+A fused in_proj would interleave differently-sharded segments and force
+resharding collectives at every split.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import MambaConfig
+from repro.models.layers import dense_init, rmsnorm
+
+
+class MambaState(NamedTuple):
+    conv_x: jnp.ndarray  # [B, d_conv-1, d_inner]
+    conv_B: jnp.ndarray  # [B, d_conv-1, N]
+    conv_C: jnp.ndarray  # [B, d_conv-1, N]
+    ssm: jnp.ndarray     # [B, H, P, N] f32
+
+
+def init_mamba(key, d_model: int, cfg: MambaConfig, dtype) -> dict:
+    d_in = cfg.d_inner(d_model)
+    H = cfg.n_heads(d_model)
+    N = cfg.d_state
+    ks = jax.random.split(key, 10)
+    dt_init = jnp.exp(jax.random.uniform(ks[8], (H,), jnp.float32,
+                                         jnp.log(1e-3), jnp.log(1e-1)))
+    return {
+        "in_z": dense_init(ks[0], (d_model, d_in), dtype),
+        "in_x": dense_init(ks[1], (d_model, d_in), dtype),
+        "in_B": dense_init(ks[2], (d_model, N), dtype),
+        "in_C": dense_init(ks[3], (d_model, N), dtype),
+        "in_dt": dense_init(ks[4], (d_model, H), dtype),
+        "conv_x_w": dense_init(ks[5], (cfg.d_conv, d_in), dtype, scale=3.0),
+        "conv_B_w": dense_init(ks[6], (cfg.d_conv, N), dtype, scale=3.0),
+        "conv_C_w": dense_init(ks[7], (cfg.d_conv, N), dtype, scale=3.0),
+        "conv_x_b": jnp.zeros((d_in,), dtype),
+        "conv_B_b": jnp.zeros((N,), dtype),
+        "conv_C_b": jnp.zeros((N,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H).astype(jnp.float32)),
+        "D_skip": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(dt_init)),  # softplus^-1(dt_init)
+        "norm": {"scale": jnp.ones((d_in,), dtype)},
+        "out_proj": dense_init(ks[9], (d_in, d_model), dtype),
+    }
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                 d_conv: int) -> jnp.ndarray:
+    """Depthwise causal conv along time.  x [B, T, C], w [d_conv, C]."""
+    T = x.shape[1]
+    xp = jnp.pad(x, ((0, 0), (d_conv - 1, 0), (0, 0)))
+    out = sum(xp[:, i:i + T] * w[i][None, None] for i in range(d_conv))
+    return out + b
+
+
+def _init_state(batch: int, d_model: int, cfg: MambaConfig,
+                dtype) -> MambaState:
+    d_in = cfg.d_inner(d_model)
+    H = cfg.n_heads(d_model)
+    W = cfg.d_conv - 1
+    return MambaState(
+        conv_x=jnp.zeros((batch, W, d_in), dtype),
+        conv_B=jnp.zeros((batch, W, cfg.d_state), dtype),
+        conv_C=jnp.zeros((batch, W, cfg.d_state), dtype),
+        ssm=jnp.zeros((batch, H, cfg.head_dim, cfg.d_state), jnp.float32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Chunked SSD forward (train / prefill)
+# ---------------------------------------------------------------------------
+def mamba_forward(params: dict, u: jnp.ndarray, cfg: MambaConfig,
+                  d_model: int, norm_eps: float = 1e-6,
+                  return_state: bool = False):
+    """u [B, T, D] -> y [B, T, D] (+ final MambaState if requested)."""
+    B, T, D = u.shape
+    d_in = cfg.d_inner(d_model)
+    N, H, P = cfg.d_state, cfg.n_heads(d_model), cfg.head_dim
+    Lc = min(cfg.chunk_size, T)
+    pad = (-T) % Lc
+    Tp = T + pad
+
+    z = jnp.einsum("btd,de->bte", u, params["in_z"])
+    x_raw = jnp.einsum("btd,de->bte", u, params["in_x"])
+    B_raw = jnp.einsum("btd,de->bte", u, params["in_B"])
+    C_raw = jnp.einsum("btd,de->bte", u, params["in_C"])
+    dt = jnp.einsum("btd,de->bte", u, params["in_dt"])
+
+    silu = lambda a: jax.nn.silu(a.astype(jnp.float32))
+    xc = silu(_causal_conv(x_raw, params["conv_x_w"], params["conv_x_b"],
+                           cfg.d_conv))
+    Bm = silu(_causal_conv(B_raw, params["conv_B_w"], params["conv_B_b"],
+                           cfg.d_conv))
+    Cm = silu(_causal_conv(C_raw, params["conv_C_w"], params["conv_C_b"],
+                           cfg.d_conv))
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])                        # [H] negative
+
+    if pad:
+        xc = jnp.pad(xc, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+    nc = Tp // Lc
+
+    xh = xc.reshape(B, nc, Lc, H, P)
+    Bc = Bm.reshape(B, nc, Lc, N)
+    Cc = Cm.reshape(B, nc, Lc, N)
+    dtc = dt.reshape(B, nc, Lc, H)
+
+    a = dtc * A                                          # [B,nc,Lc,H] <= 0
+    cum_a = jnp.cumsum(a, axis=2)                        # within chunk
+
+    # intra-chunk (quadratic in Lc): scores[t,s] = (C_t.B_s) e^{ca_t-ca_s} dt_s
+    cb = jnp.einsum("bcln,bcmn->bclm", Cc, Bc)           # [B,nc,Lc,Lc]
+    decay = jnp.exp(cum_a[:, :, :, None, :] -
+                    cum_a[:, :, None, :, :])             # [B,nc,Lc,Lc,H]
+    tri = jnp.tril(jnp.ones((Lc, Lc), jnp.float32))
+    scores = (cb[..., None] * decay * dtc[:, :, None, :, :]
+              * tri[None, None, :, :, None])             # [B,nc,Lc,Lc,H]
+    y_intra = jnp.einsum("bclmh,bcmhp->bclhp", scores, xh)
+
+    # chunk states: S_c = sum_s e^{ca_last - ca_s} dt_s B_s (x) x_s
+    seg = jnp.exp(cum_a[:, :, -1:, :] - cum_a) * dtc     # [B,nc,Lc,H]
+    S = jnp.einsum("bclh,bcln,bclhp->bchpn", seg, Bc, xh)  # [B,nc,H,P,N]
+
+    # inter-chunk recurrence over nc (associative scan)
+    chunk_decay = jnp.exp(cum_a[:, :, -1, :])            # [B,nc,H]
+
+    def combine(c1, c2):
+        d1, s1 = c1
+        d2, s2 = c2
+        return d1 * d2, s2 + s1 * d2[..., None, None]
+
+    dH, sH = jax.lax.associative_scan(combine, (chunk_decay, S), axis=1)
+    # state entering chunk c = scan result of chunk c-1 (shift right)
+    H_in = jnp.pad(sH[:, :-1], ((0, 0), (1, 0), (0, 0), (0, 0), (0, 0)))
+
+    y_inter = jnp.einsum("bcln,bchpn,bclh->bclhp", Cc, H_in,
+                         jnp.exp(cum_a))
+    y = y_intra + y_inter + params["D_skip"][None, None, None, :, None] * xh
+    y = y.reshape(B, Tp, d_in)[:, :T]
+
+    zf = jax.nn.silu(z.astype(jnp.float32))
+    y = rmsnorm(params["norm"], (y * zf).astype(u.dtype), norm_eps)
+    out = jnp.einsum("bti,id->btd", y, params["out_proj"])
+
+    if not return_state:
+        return out
+    # ssm state after the last real token: padded tail has dt=0 ->
+    # decay 1, contribution 0, so the scan result is unaffected.
+    W = cfg.d_conv - 1
+    state = MambaState(
+        conv_x=jnp.pad(x_raw, ((0, 0), (W, 0), (0, 0)))[:, T:T + W]
+        .astype(u.dtype),
+        conv_B=jnp.pad(B_raw, ((0, 0), (W, 0), (0, 0)))[:, T:T + W]
+        .astype(u.dtype),
+        conv_C=jnp.pad(C_raw, ((0, 0), (W, 0), (0, 0)))[:, T:T + W]
+        .astype(u.dtype),
+        ssm=sH[:, -1],
+    )
+    return out, state
+
+
+# ---------------------------------------------------------------------------
+# Single-token decode step
+# ---------------------------------------------------------------------------
+def mamba_step(params: dict, u: jnp.ndarray, state: MambaState,
+               cfg: MambaConfig, d_model: int,
+               norm_eps: float = 1e-6) -> Tuple[jnp.ndarray, MambaState]:
+    """u [B, D] one token -> (y [B, D], state')."""
+    B, D = u.shape
+    d_in = cfg.d_inner(d_model)
+    N, H, P = cfg.d_state, cfg.n_heads(d_model), cfg.head_dim
+
+    z = jnp.einsum("bd,de->be", u, params["in_z"])
+    x_new = jnp.einsum("bd,de->be", u, params["in_x"])
+    B_new = jnp.einsum("bd,de->be", u, params["in_B"])
+    C_new = jnp.einsum("bd,de->be", u, params["in_C"])
+    dt = jnp.einsum("bd,de->be", u, params["in_dt"])
+
+    def step_conv(stream_state, new, w, b):
+        win = jnp.concatenate([stream_state, new[:, None]], axis=1)
+        out = (win * w[None]).sum(axis=1) + b
+        return jax.nn.silu(out.astype(jnp.float32)), win[:, 1:]
+
+    xc, new_cx = step_conv(state.conv_x, x_new, params["conv_x_w"],
+                           params["conv_x_b"])
+    Bm, new_cB = step_conv(state.conv_B, B_new, params["conv_B_w"],
+                           params["conv_B_b"])
+    Cm, new_cC = step_conv(state.conv_C, C_new, params["conv_C_w"],
+                           params["conv_C_b"])
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # [B,H]
+    A = -jnp.exp(params["A_log"])
+    xh = xc.reshape(B, H, P)
+
+    decay = jnp.exp(dt * A)                              # [B,H]
+    dBx = jnp.einsum("bh,bn,bhp->bhpn", dt, Bm, xh)
+    ssm = state.ssm * decay[:, :, None, None] + dBx
+    y = jnp.einsum("bn,bhpn->bhp", Cm, ssm) \
+        + params["D_skip"][None, :, None] * xh           # [B,H,P]
+    y = y.reshape(B, d_in)
+
+    zf = jax.nn.silu(z.astype(jnp.float32))
+    y = rmsnorm(params["norm"], (y * zf).astype(u.dtype), norm_eps)
+    out = jnp.einsum("bi,id->bd", y, params["out_proj"])
+    return out, MambaState(conv_x=new_cx.astype(state.conv_x.dtype),
+                           conv_B=new_cB.astype(state.conv_B.dtype),
+                           conv_C=new_cC.astype(state.conv_C.dtype),
+                           ssm=ssm)

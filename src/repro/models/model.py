@@ -1,0 +1,227 @@
+"""LM wrapper: embeddings -> period-scanned block stack -> logits.
+
+The layer stack is organised as ``cfg.period`` (a static tuple of
+(mixer, ffn) kinds) repeated ``cfg.n_periods`` times.  Parameters and
+serving caches for period position j are stacked over periods, and the
+stack is executed with ``jax.lax.scan`` — one compiled block body per
+period position regardless of depth (critical for compile time with
+36-72-layer models on the 512-device dry-run, and the idiomatic TPU
+pattern).
+
+Multi-codebook audio (musicgen): tokens [B, T, C]; codebook embeddings
+are summed at the input and C parallel heads produce [B, T, C, V]
+logits.  VLM / audio frontends are stubs per the assignment: callers
+pass precomputed ``prefix_emb`` [B, n_prefix, D].
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ATTN, ModelConfig, RaasConfig
+from repro.core import paged_cache as pc
+from repro.core import policies
+from repro.models import blocks, layers
+
+# Trace-time switch: fully unroll the layer scan.  Used by the dry-run
+# cost model — XLA's HloCostAnalysis counts a while-loop body ONCE
+# regardless of trip count, so roofline terms are derived from small
+# unrolled variants and extrapolated (launch/dryrun.py), while the
+# full-depth scanned program proves sharding/compile.
+SCAN_UNROLL = [False]
+
+
+def _scan(body, init, xs):
+    return jax.lax.scan(body, init, xs, unroll=True) if SCAN_UNROLL[0] \
+        else jax.lax.scan(body, init, xs)
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+def init_params(key, cfg: ModelConfig, dtype=jnp.float32) -> dict:
+    C = cfg.n_codebooks
+    keys = jax.random.split(key, 3 + len(cfg.period))
+    params = {
+        "embed": layers.dense_init(keys[0], (C, cfg.vocab_size, cfg.d_model),
+                                   dtype, scale=1.0),
+        "norm_f": layers.init_rmsnorm(cfg.d_model, dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = layers.dense_init(
+            keys[1], (cfg.d_model, C, cfg.vocab_size), dtype)
+    block_stacks = []
+    for j, (mixer, ffn_kind) in enumerate(cfg.period):
+        jkeys = jax.random.split(keys[3 + j], cfg.n_periods)
+        stacked = jax.vmap(
+            lambda k: blocks.init_block(k, cfg, mixer, ffn_kind, dtype)
+        )(jkeys)
+        block_stacks.append(stacked)
+    params["blocks"] = tuple(block_stacks)
+    return params
+
+
+def _embed(params: dict, cfg: ModelConfig, tokens: jnp.ndarray,
+           prefix_emb: Optional[jnp.ndarray]) -> jnp.ndarray:
+    """tokens [B, T] or [B, T, C] -> h [B, n_prefix + T, D]."""
+    if tokens.ndim == 2:
+        tokens = tokens[..., None]
+    C = cfg.n_codebooks
+    emb = params["embed"]                       # [C, V, D]
+    h = jnp.take(emb[0], tokens[..., 0], axis=0)
+    for c in range(1, C):
+        h = h + jnp.take(emb[c], tokens[..., c], axis=0)
+    if prefix_emb is not None:
+        h = jnp.concatenate([prefix_emb.astype(h.dtype), h], axis=1)
+    return h
+
+
+def _logits(params: dict, cfg: ModelConfig, h: jnp.ndarray) -> jnp.ndarray:
+    """h [..., D] -> logits [..., V] (or [..., C, V] for C > 1)."""
+    h = layers.rmsnorm(params["norm_f"], h, cfg.norm_eps)
+    if cfg.tie_embeddings:
+        out = jnp.einsum("...d,cvd->...cv", h, params["embed"])
+    else:
+        out = jnp.einsum("...d,dcv->...cv", h, params["lm_head"])
+    if cfg.n_codebooks == 1:
+        out = out[..., 0, :]
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Train forward
+# ---------------------------------------------------------------------------
+def forward_train(params: dict, cfg: ModelConfig, tokens: jnp.ndarray,
+                  prefix_emb: Optional[jnp.ndarray] = None,
+                  impl: str = "jnp", remat: bool = True,
+                  capacity_factor: float = 1.25
+                  ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (logits [B, T_tot, (C,) V], aux_loss scalar)."""
+    h = _embed(params, cfg, tokens, prefix_emb)
+    B, T = h.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32), (B, T))
+
+    def body(carry, xs):
+        h, aux = carry
+        for j, (mixer, ffn_kind) in enumerate(cfg.period):
+            h, a = blocks.block_train(
+                jax.tree.map(lambda x: x, xs[j]), cfg, h, positions,
+                mixer, ffn_kind, impl=impl, capacity_factor=capacity_factor)
+            aux = aux + a
+        return (h, aux), None
+
+    if remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    (h, aux), _ = _scan(body, (h, jnp.zeros((), jnp.float32)),
+                        params["blocks"])
+    return _logits(params, cfg, h), aux
+
+
+def loss_fn(logits: jnp.ndarray, targets: jnp.ndarray,
+            mask: jnp.ndarray) -> jnp.ndarray:
+    """Mean CE.  logits [B,T,V] or [B,T,C,V]; targets match; mask [B,T]."""
+    if logits.ndim == 4 and targets.ndim == 2:
+        targets = targets[..., None]
+    lse = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+    gold = jnp.take_along_axis(
+        logits.astype(jnp.float32), targets[..., None], axis=-1)[..., 0]
+    nll = lse - gold                           # [B,T] or [B,T,C]
+    if nll.ndim == 3:
+        nll = nll.mean(-1)
+    return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+
+
+# ---------------------------------------------------------------------------
+# Serving cache
+# ---------------------------------------------------------------------------
+class ModelCache(NamedTuple):
+    per_pos: Tuple[blocks.BlockCache, ...]   # one per period position,
+                                             # leaves stacked [n_periods, ...]
+
+
+def cache_spec(cfg: ModelConfig, raas: RaasConfig, max_seq_len: int,
+               prefill_len: int, dtype=jnp.float32) -> pc.CacheSpec:
+    n_slots = policies.cache_slots(raas, max_seq_len, prefill_len)
+    return pc.CacheSpec(n_slots=n_slots, page_size=raas.page_size,
+                        n_kv_heads=cfg.n_kv_heads,
+                        head_dim=cfg.resolved_head_dim, dtype=dtype)
+
+
+def init_model_cache(cfg: ModelConfig, raas: RaasConfig, batch: int,
+                     max_seq_len: int, prefill_len: int = 0,
+                     dtype=jnp.float32) -> ModelCache:
+    spec = None
+    if cfg.has_attention:
+        spec = cache_spec(cfg, raas, max_seq_len, prefill_len, dtype)
+    per_pos = []
+    for mixer, _ffn in cfg.period:
+        one = blocks.init_block_cache(cfg, mixer, spec, batch, dtype)
+        stacked = jax.tree.map(
+            lambda x: jnp.repeat(x[None], cfg.n_periods, axis=0), one)
+        per_pos.append(stacked)
+    return ModelCache(per_pos=tuple(per_pos))
+
+
+# ---------------------------------------------------------------------------
+# Prefill
+# ---------------------------------------------------------------------------
+def prefill(params: dict, cfg: ModelConfig, tokens: jnp.ndarray,
+            lengths: jnp.ndarray, cache: ModelCache,
+            prefix_emb: Optional[jnp.ndarray] = None,
+            impl: str = "jnp") -> Tuple[ModelCache, jnp.ndarray]:
+    """Returns (cache', last_logits [B, (C,) V]).
+
+    ``lengths`` [B] counts *token* length per sequence (prefix tokens,
+    if any, are shared and included automatically).
+    """
+    h = _embed(params, cfg, tokens, prefix_emb)
+    B, T = h.shape[:2]
+    n_prefix = 0 if prefix_emb is None else prefix_emb.shape[1]
+    tot_lengths = lengths + n_prefix
+    positions = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32), (B, T))
+
+    def body(h, xs):
+        block_params, block_cache = xs
+        new_caches = []
+        for j, (mixer, ffn_kind) in enumerate(cfg.period):
+            h, new_c, _aux = blocks.block_prefill(
+                block_params[j], cfg, h, positions, tot_lengths,
+                block_cache[j], mixer, ffn_kind, impl=impl)
+            new_caches.append(new_c)
+        return h, tuple(new_caches)
+
+    h, new_per_pos = _scan(body, h, (params["blocks"], cache.per_pos))
+    last_h = jnp.take_along_axis(
+        h, (tot_lengths - 1)[:, None, None].astype(jnp.int32), axis=1)[:, 0]
+    return ModelCache(per_pos=new_per_pos), _logits(params, cfg, last_h)
+
+
+# ---------------------------------------------------------------------------
+# Decode step (the paper's serving loop body)
+# ---------------------------------------------------------------------------
+def decode_step(params: dict, cfg: ModelConfig, token: jnp.ndarray,
+                pos: jnp.ndarray, cache: ModelCache, raas: RaasConfig,
+                impl: str = "jnp") -> Tuple[ModelCache, jnp.ndarray]:
+    """token [B] or [B, C]; pos [B] absolute positions.
+
+    Returns (cache', logits [B, (C,) V]).
+    """
+    if token.ndim == 1:
+        token = token[:, None]
+    h = _embed(params, cfg, token[:, None, :], None)[:, 0]   # [B, D]
+
+    def body(h, xs):
+        block_params, block_cache = xs
+        new_caches = []
+        for j, (mixer, ffn_kind) in enumerate(cfg.period):
+            h, new_c = blocks.block_decode(
+                block_params[j], cfg, h, pos, block_cache[j], mixer,
+                ffn_kind, raas, impl=impl)
+            new_caches.append(new_c)
+        return h, tuple(new_caches)
+
+    h, new_per_pos = _scan(body, h, (params["blocks"], cache.per_pos))
+    return ModelCache(per_pos=new_per_pos), _logits(params, cfg, h)

@@ -1,0 +1,81 @@
+"""AdamW + cosine LR schedule + global-norm clipping, from scratch.
+
+No optax in this environment; this is the standard decoupled-weight-
+decay Adam (Loshchilov & Hutter) with f32 moments regardless of param
+dtype (mixed-precision training: bf16 params, f32 optimizer state).
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray      # i32 scalar
+    mu: Any                # pytree like params, f32
+    nu: Any                # pytree like params, f32
+
+
+def init(params, moments_dtype=jnp.float32) -> AdamWState:
+    """moments_dtype=bf16 halves optimizer memory (large-model option;
+    slight quality cost, standard at the >=100B scale)."""
+    z = lambda p: jnp.zeros(p.shape, moments_dtype)
+    return AdamWState(
+        step=jnp.zeros((), jnp.int32),
+        mu=jax.tree.map(z, params),
+        nu=jax.tree.map(z, params),
+    )
+
+
+def cosine_schedule(step: jnp.ndarray, base_lr: float, warmup_steps: int,
+                    total_steps: int, min_ratio: float = 0.1) -> jnp.ndarray:
+    step = step.astype(jnp.float32)
+    warm = (step + 1) / jnp.maximum(warmup_steps, 1)
+    frac = (step - warmup_steps) / jnp.maximum(total_steps - warmup_steps, 1)
+    frac = jnp.clip(frac, 0.0, 1.0)
+    cos = min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * frac))
+    return base_lr * jnp.where(step < warmup_steps, warm, cos)
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree.leaves(grads)
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                         for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gnorm, 1e-9))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), gnorm
+
+
+def update(params, grads, state: AdamWState, lr: jnp.ndarray,
+           b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+           weight_decay: float = 0.1) -> Tuple[Any, AdamWState]:
+    step = state.step + 1
+    t = step.astype(jnp.float32)
+    bc1 = 1 - b1 ** t
+    bc2 = 1 - b2 ** t
+
+    def upd(p, g, mu, nu):
+        g = g.astype(jnp.float32)
+        mdt = mu.dtype
+        mu = (b1 * mu.astype(jnp.float32) + (1 - b1) * g).astype(mdt)
+        nu = (b2 * nu.astype(jnp.float32)
+              + (1 - b2) * jnp.square(g)).astype(mdt)
+        mhat = mu.astype(jnp.float32) / bc1
+        vhat = nu.astype(jnp.float32) / bc2
+        delta = mhat / (jnp.sqrt(vhat) + eps)
+        # decoupled weight decay on matrices only (ndim >= 2)
+        wd = weight_decay if p.ndim >= 2 else 0.0
+        new_p = p.astype(jnp.float32) - lr * (delta + wd * p.astype(jnp.float32))
+        return new_p.astype(p.dtype), mu, nu
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_mu = tdef.flatten_up_to(state.mu)
+    flat_nu = tdef.flatten_up_to(state.nu)
+    out = [upd(p, g, m, n) for p, g, m, n
+           in zip(flat_p, flat_g, flat_mu, flat_nu)]
+    new_p = tdef.unflatten([o[0] for o in out])
+    new_mu = tdef.unflatten([o[1] for o in out])
+    new_nu = tdef.unflatten([o[2] for o in out])
+    return new_p, AdamWState(step=step, mu=new_mu, nu=new_nu)

