@@ -20,8 +20,8 @@ import numpy as np
 
 from benchmarks.common import policy_cfg, trained_reasoner
 from repro.core import paged_cache as pc
-from repro.core import policies
 from repro.core.attention import decode_attend
+from repro.core.policy_base import get_policy
 from repro.data.pipeline import make_example, prompt_of
 from repro.models import layers, model as M
 
@@ -74,7 +74,7 @@ def run(n_eval: int = 4, max_steps: int = 120) -> Dict:
             _, plen = prompt_of(dc, 70_000 + idx)
             T = min(len(toks), plen + max_steps)
             q_tr, k_tr, v_tr = _qkv_trace(params, cfg, toks[:T])
-            n_slots = policies.cache_slots(raas, T, plen)
+            n_slots = get_policy(raas.policy).cache_slots(raas, T, plen)
             spec = pc.CacheSpec(n_slots, raas.page_size, cfg.n_kv_heads,
                                 cfg.resolved_head_dim, jnp.float32)
             cache = pc.init_cache(spec, 1)

@@ -1,14 +1,19 @@
-"""Paper Fig. 7 proxy: per-step latency and KV memory vs decode length.
+"""Paper Fig. 7 proxy: per-step latency and KV memory vs decode length,
+plus the serving-stack dispatch-overhead sweep.
 
 Claims reproduced:
   * Dense decode step cost grows with N (O(N) per step, O(N^2) total);
     RaaS/Quest per-step cost is O(L), flat in N.
   * Dense and Quest KV memory grow linearly with N; RaaS plateaus at
     the budget L.
+  * Fused multi-token decode: one jitted dispatch per K tokens —
+    tokens/sec at K=1 vs K=8/16/32 quantifies the per-token dispatch +
+    host-round-trip overhead the chunked engine removes (jnp backend).
 
 Latency here is measured wall-clock on CPU for the *attention step*
 shapes at growing cache sizes; memory is the exact static allocation
-of each policy's cache (which is the paper's point — it is static).
+of each policy's cache — every array of it, including rep keys and
+page metadata (which is the paper's point — it is static).
 """
 from __future__ import annotations
 
@@ -22,17 +27,19 @@ import numpy as np
 from benchmarks.common import BENCH_MODEL, policy_cfg
 from repro.config import RaasConfig
 from repro.core import paged_cache as pc
-from repro.core import policies
 from repro.core.attention import decode_attend
+from repro.core.policy_base import get_policy
+from repro.models import model as M
 
 DECODE_LENS = [256, 512, 1024, 2048, 4096, 8192]
 BUDGET = 512
+CHUNK_KS = [1, 8, 16, 32]
 
 
 def _bench_step(policy: str, n_ctx: int, iters: int = 20) -> Dict:
     cfg = BENCH_MODEL
     raas = policy_cfg(policy, BUDGET, page_size=16)
-    n_slots = policies.cache_slots(raas, n_ctx + iters + 1, 64)
+    n_slots = get_policy(policy).cache_slots(raas, n_ctx + iters + 1, 64)
     spec = pc.CacheSpec(n_slots, raas.page_size, cfg.n_kv_heads,
                         cfg.resolved_head_dim, jnp.float32)
     cache = pc.init_cache(spec, 1)
@@ -55,8 +62,59 @@ def _bench_step(policy: str, n_ctx: int, iters: int = 20) -> Dict:
         cache, ctx, _ = step(cache, q, kn, kn)
     jax.block_until_ready(ctx)
     us = (time.perf_counter() - t0) / iters * 1e6
-    kv_bytes = cache.k_pages.nbytes + cache.v_pages.nbytes
+    # full footprint: K/V pages + rep keys + per-page metadata
+    kv_bytes = sum(x.nbytes for x in jax.tree.leaves(cache))
     return {"us_per_step": us, "kv_bytes": kv_bytes}
+
+
+def _bench_chunked(k_steps: int, n_tokens: int = 128,
+                   batch: int = 4) -> Dict:
+    """End-to-end decode throughput of the fused ``decode_chunk`` at
+    chunk length K: the K=1 row is the old one-dispatch-per-token
+    engine loop (host argmax round-trip per token); larger K amortises
+    dispatch + sync across the chunk."""
+    cfg = BENCH_MODEL
+    raas = policy_cfg("raas", BUDGET, page_size=16)
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    max_seq = 64 + n_tokens + k_steps + 1
+    cache = M.init_model_cache(cfg, raas, batch, max_seq, prefill_len=64)
+    rng = np.random.default_rng(0)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (batch, 64)),
+                       jnp.int32)
+    cache, logits = jax.jit(
+        lambda p, c, t, l: M.prefill(p, cfg, t, l, c))(
+            params, cache, toks, jnp.full((batch,), 64, jnp.int32))
+
+    chunk = jax.jit(
+        lambda p, c, tok, pos, act, n, eos, mx: M.decode_chunk(
+            p, cfg, c, tok, pos, act, n, eos, mx, raas,
+            steps=k_steps, max_seq=max_seq),
+        static_argnames=())
+    token = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    pos = jnp.full((batch,), 64, jnp.int32)
+    active = jnp.ones((batch,), bool)
+    n_emitted = jnp.ones((batch,), jnp.int32)
+    eos = jnp.full((batch,), -1, jnp.int32)
+    mx = jnp.full((batch,), n_tokens + k_steps + 1, jnp.int32)
+
+    def run_once(cache, token, pos, n_emitted):
+        for _ in range(n_tokens // k_steps):
+            cache, out = chunk(params, cache, token, pos, active,
+                               n_emitted, eos, mx)
+            # chunk boundary: the engine syncs here
+            token = out.token
+            pos, n_emitted = out.pos, out.n_emitted
+            np.asarray(token)
+        return cache, token
+
+    run_once(cache, token, pos, n_emitted)          # compile
+    t0 = time.perf_counter()
+    _, tok_final = run_once(cache, token, pos, n_emitted)
+    jax.block_until_ready(tok_final)
+    dt = time.perf_counter() - t0
+    tps = batch * n_tokens / dt
+    return {"k": k_steps, "tok_per_s": tps,
+            "dispatches": n_tokens // k_steps}
 
 
 def run() -> Dict:
@@ -73,7 +131,18 @@ def run() -> Dict:
     dense_mem = [r["kv_bytes"] for r in rows if r["policy"] == "dense"]
     assert raas_mem[-1] == raas_mem[2], "RaaS memory must plateau"
     assert dense_mem[-1] > 4 * dense_mem[0], "Dense memory must grow"
-    return {"rows": rows}
+    # dispatch-overhead sweep: tokens/sec vs chunk length
+    chunk_rows = []
+    for k in CHUNK_KS:
+        r = _bench_chunked(k)
+        print(f"fig7/chunked-K{k},tok_per_s={r['tok_per_s']:.1f},"
+              f"dispatches={r['dispatches']}", flush=True)
+        chunk_rows.append(r)
+    base = chunk_rows[0]["tok_per_s"]
+    for r in chunk_rows[1:]:
+        print(f"fig7/chunked-K{r['k']}-speedup,"
+              f"{r['tok_per_s']/base:.2f}x", flush=True)
+    return {"rows": rows, "chunked": chunk_rows}
 
 
 if __name__ == "__main__":

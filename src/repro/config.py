@@ -207,9 +207,6 @@ class ModelConfig:
 # ---------------------------------------------------------------------------
 # RaaS / sparsity-policy config (the paper's contribution).
 # ---------------------------------------------------------------------------
-POLICIES = ("dense", "raas", "quest", "h2o", "streaming", "quest_raas")
-
-
 @dataclass(frozen=True)
 class RaasConfig:
     """KV-cache sparsity policy configuration (paper §3).
@@ -246,10 +243,17 @@ class RaasConfig:
     prefill_pages_hint: int = 0
 
     def __post_init__(self) -> None:
-        if self.policy not in POLICIES:
-            raise ValueError(f"policy must be one of {POLICIES}")
+        # lazy import: the registry lives downstream of this module.
+        from repro.core.policy_base import get_policy
+        get_policy(self.policy)      # raises ValueError on unknown ids
         if self.budget_tokens % self.page_size:
             raise ValueError("budget_tokens must be a multiple of page_size")
+
+    @property
+    def policy_obj(self):
+        """The registered :class:`SparsityPolicy` singleton for ``policy``."""
+        from repro.core.policy_base import get_policy
+        return get_policy(self.policy)
 
     @property
     def budget_pages(self) -> int:

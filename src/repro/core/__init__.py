@@ -1,7 +1,9 @@
 """The paper's primary contribution: RaaS KV-cache sparsity.
 
 paged_cache.py — slot-based fixed-capacity paged KV cache (O(L))
-policies.py    — raas | quest | h2o | streaming | dense | quest_raas
+policy_base.py — SparsityPolicy interface + decorator registry
+policies/      — one file per policy: raas | quest | h2o | streaming |
+                 dense | quest_raas (drop a file in to add one)
 attention.py   — policy-aware decode attention step (append / score /
                  select / attend / refresh), one fused jittable fn
 """

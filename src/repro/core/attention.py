@@ -12,43 +12,51 @@
      CPU) which also emits true per-page probability mass,
   5. refreshes priorities (RaaS timestamps / H2O accumulation).
 
-Everything is one fused jittable function of the cache pytree.
+Everything is one fused jittable function of the cache pytree.  All
+policy semantics enter through the :class:`SparsityPolicy` object —
+this module contains no per-policy branches.
 """
 from __future__ import annotations
 
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.config import RaasConfig
 from repro.core import paged_cache as pc
-from repro.core import policies
+from repro.core.policy_base import PolicyStats, SparsityPolicy, get_policy
 from repro.kernels import ops
 
 
 def decode_attend(cache: pc.PagedCache, q: jnp.ndarray, k_new: jnp.ndarray,
                   v_new: jnp.ndarray, cfg: RaasConfig,
+                  policy: Optional[SparsityPolicy] = None,
                   has_prefill: bool = True,
                   impl: str = "jnp") -> Tuple[pc.PagedCache, jnp.ndarray,
-                                              policies.PolicyStats]:
+                                              PolicyStats]:
     """One decode step of sparse attention for one layer.
 
     q      [B, H, hd]   (post-RoPE query for the new token)
     k_new  [B, KV, hd]  (post-RoPE key)
     v_new  [B, KV, hd]
 
+    ``policy`` defaults to the registered policy for ``cfg.policy``;
+    hot paths resolve it once and pass the object through.
+
     Returns (cache', ctx [B, H, hd], stats).
     """
+    if policy is None:
+        policy = get_policy(cfg.policy)
     B, H, hd = q.shape
     scale = 1.0 / (hd ** 0.5)
 
     # -- 1. append (evict if the policy's budget is exhausted) -------------
     cache, evicted = pc.append_token(
         cache, k_new, v_new,
-        new_page_priority=policies.new_page_priority(cache, cfg),
-        protect_recent=policies.protect_recent_tokens(cfg),
-        pin_below_pos=policies.sink_pin_below(has_prefill, cfg),
+        new_page_priority=policy.new_page_priority(cache, cfg),
+        protect_recent=policy.protect_recent(cfg),
+        pin_below_pos=policy.sink_pin(has_prefill, cfg),
     )
 
     # -- 2. representative page scores -------------------------------------
@@ -61,7 +69,7 @@ def decode_attend(cache: pc.PagedCache, q: jnp.ndarray, k_new: jnp.ndarray,
                                 scale, impl=impl)
 
     # -- 3. page selection ---------------------------------------------------
-    sel_idx = policies.select_pages(cache, scores, cfg)
+    sel_idx = policy.select_pages(cache, scores, cfg)
     token_mask = cache.token_mask()
     if sel_idx is None:
         k_sel, v_sel, mask_sel = cache.k_pages, cache.v_pages, token_mask
@@ -75,7 +83,7 @@ def decode_attend(cache: pc.PagedCache, q: jnp.ndarray, k_new: jnp.ndarray,
     ctx, page_probs_sel = ops.paged_decode_attention(
         q, k_sel, v_sel, mask_sel, scale, impl=impl)
 
-    # scatter per-page probs back to full slot space for H2O
+    # scatter per-page probs back to full slot space (H2O's signal)
     if sel_idx is None:
         page_probs = page_probs_sel
     else:
@@ -84,9 +92,9 @@ def decode_attend(cache: pc.PagedCache, q: jnp.ndarray, k_new: jnp.ndarray,
             page_probs_sel)
 
     # -- 5. priority refresh -------------------------------------------------
-    cache = policies.refresh_priority(cache, scores, page_probs, cfg)
+    cache = policy.refresh_priority(cache, scores, page_probs, cfg)
 
-    stats = policies.PolicyStats(
+    stats = PolicyStats(
         evicted_slot=evicted,
         pages_attended=(mask_sel.any(-1)).sum(-1).astype(jnp.int32),
         tokens_cached=cache.tokens_cached(),

@@ -1,0 +1,93 @@
+"""Built-in KV-sparsity policies, one file per policy.
+
+This package is the registry's built-in population: importing it (which
+:func:`repro.core.policy_base.get_policy` does lazily) registers every
+module below.  The paper's "impossible trinity" (accuracy / O(L) time /
+O(L) memory), as the registered set spans it:
+
+    ============  =======  ========  ==================================
+    id            time     memory    dynamics
+    ============  =======  ========  ==================================
+    dense         O(N)     O(N)      attends everything (baseline)
+    quest         O(L)     O(N)      top-k page selection, no eviction
+    raas          O(L)     O(L)      timestamp refresh, argmin eviction
+    h2o           O(L)     O(L)      accumulated-mass eviction + window
+    streaming     O(L)     O(L)      frozen priorities = sliding window
+    quest_raas    O(k+L)   O(Npre+L) Quest over prefill, RaaS over decode
+    ============  =======  ========  ==================================
+
+Adding a policy
+===============
+Drop one file into this directory (or any imported module)::
+
+    from repro.core.policy_base import SparsityPolicy, register_policy
+
+    @register_policy("my_policy")
+    class MyPolicy(SparsityPolicy):
+        def cache_slots(self, cfg, max_seq_len, prefill_len=0):
+            return self.budget_slots(cfg, prefill_len)   # O(L)
+        def refresh_priority(self, cache, scores, page_probs, cfg):
+            ...                                          # your dynamics
+
+Nothing else changes: ``RaasConfig(policy="my_policy")`` validates
+against the registry, ``decode_attend`` / the serving engine / the
+benchmarks dispatch through the object.  If the file lives outside
+this package, import it once before building configs.
+
+The module-level functions below are convenience wrappers that resolve
+``cfg.policy`` through the registry — the hot path holds the policy
+object directly and never re-resolves per step.
+"""
+from __future__ import annotations
+
+from typing import TYPE_CHECKING, Optional
+
+import jax.numpy as jnp
+
+from repro.core.policy_base import (PolicyStats, SparsityPolicy,
+                                    available_policies, get_policy,
+                                    register_policy)
+# importing the modules registers the built-ins
+from repro.core.policies import (dense, h2o, quest, quest_raas,  # noqa: F401
+                                 raas, streaming)
+from repro.core.policies.raas import raas_selected_mask
+
+if TYPE_CHECKING:
+    from repro.config import RaasConfig
+    from repro.core.paged_cache import PagedCache
+
+__all__ = [
+    "PolicyStats", "SparsityPolicy", "available_policies", "get_policy",
+    "register_policy", "raas_selected_mask", "cache_slots", "select_pages",
+    "refresh_priority", "new_page_priority", "protect_recent_tokens",
+    "sink_pin_below",
+]
+
+
+def cache_slots(cfg: "RaasConfig", max_seq_len: int,
+                prefill_len: int = 0) -> int:
+    return get_policy(cfg.policy).cache_slots(cfg, max_seq_len, prefill_len)
+
+
+def select_pages(cache: "PagedCache", scores: jnp.ndarray,
+                 cfg: "RaasConfig") -> Optional[jnp.ndarray]:
+    return get_policy(cfg.policy).select_pages(cache, scores, cfg)
+
+
+def refresh_priority(cache: "PagedCache", scores: jnp.ndarray,
+                     page_probs: jnp.ndarray,
+                     cfg: "RaasConfig") -> "PagedCache":
+    return get_policy(cfg.policy).refresh_priority(cache, scores,
+                                                   page_probs, cfg)
+
+
+def new_page_priority(cache: "PagedCache", cfg: "RaasConfig") -> jnp.ndarray:
+    return get_policy(cfg.policy).new_page_priority(cache, cfg)
+
+
+def protect_recent_tokens(cfg: "RaasConfig") -> int:
+    return get_policy(cfg.policy).protect_recent(cfg)
+
+
+def sink_pin_below(cache_has_prefill: bool, cfg: "RaasConfig") -> int:
+    return get_policy(cfg.policy).sink_pin(cache_has_prefill, cfg)

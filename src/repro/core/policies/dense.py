@@ -1,0 +1,14 @@
+"""Dense: O(N) slots, attends everything.  The no-sparsity baseline.
+
+Everything is inherited from :class:`SparsityPolicy`, whose defaults
+*are* dense semantics — this file exists so ``dense`` is a registered
+id like any other policy.
+"""
+from __future__ import annotations
+
+from repro.core.policy_base import SparsityPolicy, register_policy
+
+
+@register_policy("dense")
+class DensePolicy(SparsityPolicy):
+    pass

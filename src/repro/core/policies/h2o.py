@@ -1,0 +1,41 @@
+"""H2O (heavy-hitter oracle): accumulated-attention-mass eviction.
+
+priority = accumulated *true* attention mass per page; the recent
+window is protected.  O(L) slots; ``page_size=1`` recommended (token
+granularity, as in the paper's description).
+"""
+from __future__ import annotations
+
+from typing import TYPE_CHECKING
+
+import jax.numpy as jnp
+
+from repro.core.policy_base import SparsityPolicy, register_policy
+
+if TYPE_CHECKING:
+    from repro.config import RaasConfig
+    from repro.core.paged_cache import PagedCache
+
+
+@register_policy("h2o")
+class H2OPolicy(SparsityPolicy):
+    """O(L) memory; heavy-hitter accumulation + protected recent window."""
+
+    def cache_slots(self, cfg: "RaasConfig", max_seq_len: int,
+                    prefill_len: int = 0) -> int:
+        return self.budget_slots(cfg, prefill_len)
+
+    def refresh_priority(self, cache: "PagedCache", scores: jnp.ndarray,
+                         page_probs: jnp.ndarray,
+                         cfg: "RaasConfig") -> "PagedCache":
+        valid = cache.valid_pages()
+        return cache._replace(
+            priority=cache.priority + jnp.where(valid, page_probs, 0.0))
+
+    def new_page_priority(self, cache: "PagedCache",
+                          cfg: "RaasConfig") -> jnp.ndarray:
+        # zero mass so far; protected by the recent window instead.
+        return jnp.zeros_like(cache.cur_len, jnp.float32)
+
+    def protect_recent(self, cfg: "RaasConfig") -> int:
+        return cfg.h2o_recent

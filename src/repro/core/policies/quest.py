@@ -1,0 +1,34 @@
+"""Quest: O(N) retention, top-k page *selection* at attention time.
+
+Never evicts; each step attends the ``quest_topk_pages`` highest-
+scoring pages (by the min/max representative-key bound) plus the
+active page.  O(L) attention time, O(N) memory.
+"""
+from __future__ import annotations
+
+from typing import TYPE_CHECKING, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.paged_cache import INF
+from repro.core.policy_base import SparsityPolicy, register_policy
+
+if TYPE_CHECKING:
+    from repro.config import RaasConfig
+    from repro.core.paged_cache import PagedCache
+
+
+@register_policy("quest")
+class QuestPolicy(SparsityPolicy):
+    """O(N) memory (base-class slots), top-k page selection."""
+
+    def select_pages(self, cache: "PagedCache", scores: jnp.ndarray,
+                     cfg: "RaasConfig") -> Optional[jnp.ndarray]:
+        B, S = scores.shape
+        k = min(cfg.quest_topk_pages, S)
+        # always include the active page (recent tokens), Quest-style.
+        active = jnp.where(cache.active_slot >= 0, cache.active_slot, 0)
+        boosted = scores.at[jnp.arange(B), active].set(INF)
+        _, idx = jax.lax.top_k(boosted, k)
+        return idx.astype(jnp.int32)

@@ -1,0 +1,53 @@
+"""Quest×RaaS hybrid (the paper's §Limitations recommendation).
+
+Prefill pages are all *retained* and Quest-selected at attention time;
+decode pages get the RaaS timestamp budget -> O(N_prefill + L) memory,
+O(k + L) attention time.  Recommended for long-prefill workloads the
+pure-RaaS pinned-prefill budget cannot absorb.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import TYPE_CHECKING, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.policies.raas import RaasPolicy
+from repro.core.policy_base import register_policy
+
+if TYPE_CHECKING:
+    from repro.config import RaasConfig
+    from repro.core.paged_cache import PagedCache
+
+
+@register_policy("quest_raas")
+class QuestRaasPolicy(RaasPolicy):
+    """RaaS refresh dynamics + Quest selection over the prefill range."""
+
+    def cache_slots(self, cfg: "RaasConfig", max_seq_len: int,
+                    prefill_len: int = 0) -> int:
+        pre_pages = -(-prefill_len // cfg.page_size)
+        return pre_pages + cfg.budget_pages
+
+    def select_pages(self, cache: "PagedCache", scores: jnp.ndarray,
+                     cfg: "RaasConfig") -> Optional[jnp.ndarray]:
+        # top-k among the (static) prefill slot range + every decode
+        # slot.  Slot layout guarantees prefill occupies [0, n_pre).
+        B, S = scores.shape
+        n_pre = cfg.prefill_pages_hint
+        if n_pre == 0 or n_pre >= S:
+            return None
+        k = min(cfg.quest_topk_pages, n_pre)
+        _, idx = jax.lax.top_k(scores[:, :n_pre], k)
+        decode_idx = jnp.broadcast_to(jnp.arange(n_pre, S), (B, S - n_pre))
+        return jnp.concatenate([idx, decode_idx], axis=1).astype(jnp.int32)
+
+    def finalize_config(self, cfg: "RaasConfig",
+                        prefill_len: int) -> "RaasConfig":
+        # the static prefill page count must be known at trace time;
+        # derive it from the deployment's prefill budget if unset.
+        if cfg.prefill_pages_hint == 0:
+            return dataclasses.replace(
+                cfg, prefill_pages_hint=-(-prefill_len // cfg.page_size))
+        return cfg

@@ -1,0 +1,60 @@
+"""RaaS (the paper, §3.2): timestamp-refresh eviction over an O(L) cache.
+
+priority = timestamp of the last step whose *estimated* page score
+passed the alpha/top-r rule; evict argmin; prefill pinned.  Milestone
+pages stay resident exactly while they still receive attention mass;
+phoenix tokens live in the pinned prefill.
+"""
+from __future__ import annotations
+
+from typing import TYPE_CHECKING
+
+import jax.numpy as jnp
+
+from repro.core.policy_base import SparsityPolicy, register_policy
+
+if TYPE_CHECKING:
+    from repro.config import RaasConfig
+    from repro.core.paged_cache import PagedCache
+
+_NEG_INF = -1e30
+
+
+def raas_selected_mask(scores: jnp.ndarray, valid: jnp.ndarray,
+                       cfg: "RaasConfig") -> jnp.ndarray:
+    """[B, S] bool — pages whose timestamp refreshes this step.
+
+    ``scores`` are logit-scale estimated page scores (-inf at invalid).
+    ``use_top_r``: refresh the ceil(r * n_valid) highest-scoring pages
+    (the paper's recommended r = 50% rule).  Otherwise: refresh pages
+    whose softmax probability exceeds alpha (paper: "two sides of the
+    same coin").
+    """
+    if cfg.use_top_r:
+        # rank pages descending by score; rank < ceil(r * n_valid)
+        order = jnp.argsort(-scores, axis=1)
+        ranks = jnp.argsort(order, axis=1)               # rank of each slot
+        n_valid = valid.sum(axis=1, keepdims=True)
+        cutoff = jnp.ceil(cfg.top_r * n_valid).astype(jnp.int32)
+        return (ranks < cutoff) & valid
+    # alpha rule on estimated softmax probabilities
+    m = jnp.max(jnp.where(valid, scores, _NEG_INF), axis=1, keepdims=True)
+    e = jnp.where(valid, jnp.exp(scores - m), 0.0)
+    probs = e / jnp.maximum(e.sum(axis=1, keepdims=True), 1e-30)
+    return (probs > cfg.alpha) & valid
+
+
+@register_policy("raas")
+class RaasPolicy(SparsityPolicy):
+    """O(L) memory, O(L) time: the paper's contribution."""
+
+    def cache_slots(self, cfg: "RaasConfig", max_seq_len: int,
+                    prefill_len: int = 0) -> int:
+        return self.budget_slots(cfg, prefill_len)
+
+    def refresh_priority(self, cache: "PagedCache", scores: jnp.ndarray,
+                         page_probs: jnp.ndarray,
+                         cfg: "RaasConfig") -> "PagedCache":
+        sel = raas_selected_mask(scores, cache.valid_pages(), cfg)
+        now = cache.cur_len.astype(jnp.float32)[:, None]
+        return cache._replace(priority=jnp.where(sel, now, cache.priority))

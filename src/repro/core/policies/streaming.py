@@ -1,0 +1,28 @@
+"""StreamingLLM: sliding window + pinned sinks over an O(L) cache.
+
+priority = arrival order, never refreshed -> evicting argmin priority
+is a sliding window over decode pages; prefill (or, prompt-less, the
+first ``sink_tokens`` positions) is pinned as the attention sink.
+"""
+from __future__ import annotations
+
+from typing import TYPE_CHECKING
+
+from repro.core.policy_base import SparsityPolicy, register_policy
+
+if TYPE_CHECKING:
+    from repro.config import RaasConfig
+
+
+@register_policy("streaming")
+class StreamingPolicy(SparsityPolicy):
+    """O(L) memory; frozen arrival-order priorities."""
+
+    def cache_slots(self, cfg: "RaasConfig", max_seq_len: int,
+                    prefill_len: int = 0) -> int:
+        return self.budget_slots(cfg, prefill_len)
+
+    def sink_pin(self, has_prefill: bool, cfg: "RaasConfig") -> int:
+        # prefill pages are pinned anyway; extra sinks only for the
+        # no-prefill corner.
+        return 0 if has_prefill else cfg.sink_tokens

@@ -1,0 +1,185 @@
+"""`SparsityPolicy`: the first-class KV-sparsity plugin interface.
+
+Every cache-management strategy in the framework — RaaS (the paper),
+Quest, H2O, StreamingLLM, Dense, and any out-of-tree variant — is a
+subclass of :class:`SparsityPolicy` registered under a string id with
+:func:`register_policy`.  The decode hot path
+(:func:`repro.core.attention.decode_attend`) and the serving engine
+dispatch exclusively through the policy object; there are no
+``cfg.policy == ...`` string chains anywhere downstream of the
+registry.
+
+A policy is six hooks over the shared :class:`~repro.core.paged_cache.
+PagedCache` substrate:
+
+  ``cache_slots``       how many page slots the policy needs — this IS
+                        the paper's O(L)-vs-O(N) memory axis, made
+                        structural;
+  ``select_pages``      which pages this step's attention touches
+                        (Quest top-k; ``None`` = the whole live cache);
+  ``refresh_priority``  how eviction priority evolves (RaaS timestamps,
+                        H2O accumulation, Streaming: frozen);
+  ``new_page_priority`` priority stamped on a freshly allocated page;
+  ``protect_recent``    tokens in the recent window exempt from
+                        eviction (H2O);
+  ``sink_pin``          positions pinned as attention sinks
+                        (StreamingLLM's prompt-less corner).
+
+``finalize_config`` additionally lets a policy resolve deployment-time
+static knobs (e.g. ``quest_raas`` deriving ``prefill_pages_hint`` from
+the engine's prefill budget) without the engine knowing policy names.
+
+Policies are *stateless singletons*: all per-sequence state lives in
+the cache pytree, all knobs live in the hashable
+:class:`~repro.config.RaasConfig`, so policy objects are safe to close
+over in jitted functions.
+
+Adding a policy means adding exactly one file::
+
+    # src/repro/core/policies/my_policy.py
+    from repro.core.policy_base import SparsityPolicy, register_policy
+
+    @register_policy("my_policy")
+    class MyPolicy(SparsityPolicy):
+        def cache_slots(self, cfg, max_seq_len, prefill_len=0):
+            ...
+
+and importing it (the built-ins under ``repro.core.policies`` are
+imported automatically; out-of-tree policies register at import time).
+"""
+from __future__ import annotations
+
+from typing import TYPE_CHECKING, Dict, NamedTuple, Optional, Tuple, Type
+
+import jax.numpy as jnp
+
+if TYPE_CHECKING:  # type-only; avoids an import cycle with repro.config
+    from repro.config import RaasConfig
+    from repro.core.paged_cache import PagedCache
+
+
+class PolicyStats(NamedTuple):
+    """Per-step observability (benchmarks/Fig-proxies consume this)."""
+
+    evicted_slot: jnp.ndarray       # [B] i32, -1 = none
+    pages_attended: jnp.ndarray     # [B] i32
+    tokens_cached: jnp.ndarray      # [B] i32
+
+
+class SparsityPolicy:
+    """Base policy = Dense semantics: O(N) slots, attend everything,
+    arrival-order priorities, no protection windows."""
+
+    #: registry id; set by :func:`register_policy`.
+    name: str = "base"
+
+    # -- capacity: the O(L) vs O(N) axis -----------------------------------
+    def cache_slots(self, cfg: "RaasConfig", max_seq_len: int,
+                    prefill_len: int = 0) -> int:
+        """Number of page slots required to serve ``max_seq_len``.
+
+        Default: O(N).  +1 because prefill never shares a page with
+        decode, so a partial prefill tail page costs one extra slot.
+        """
+        return -(-max_seq_len // cfg.page_size) + 1
+
+    def budget_slots(self, cfg: "RaasConfig", prefill_len: int) -> int:
+        """Shared O(L) helper: the paper's budget includes pinned
+        prefill; guarantee at least one decode page so generation can
+        proceed."""
+        pre_pages = -(-prefill_len // cfg.page_size)
+        return max(cfg.budget_pages, pre_pages + 1)
+
+    # -- selection: which pages this step's attention touches --------------
+    def select_pages(self, cache: "PagedCache", scores: jnp.ndarray,
+                     cfg: "RaasConfig") -> Optional[jnp.ndarray]:
+        """Gather indices [B, K] for top-k-style policies, or ``None``
+        to attend the whole live cache (for O(L) policies the live
+        cache *is* the retained set)."""
+        return None
+
+    # -- eviction-priority dynamics ----------------------------------------
+    def refresh_priority(self, cache: "PagedCache", scores: jnp.ndarray,
+                         page_probs: jnp.ndarray,
+                         cfg: "RaasConfig") -> "PagedCache":
+        """Update per-page priorities after a decode step.
+
+        ``scores``: estimated page scores [B, S] (rep-key based, logit
+        scale).  ``page_probs``: true per-page attention probability
+        mass [B, S] (from the attention kernel; H2O's signal).
+        Default: static priorities (arrival order)."""
+        return cache
+
+    def new_page_priority(self, cache: "PagedCache",
+                          cfg: "RaasConfig") -> jnp.ndarray:
+        """[B] f32 priority for a freshly allocated page.  Default:
+        current length = arrival order / RaaS timestamp."""
+        return cache.cur_len.astype(jnp.float32)
+
+    # -- protection windows -------------------------------------------------
+    def protect_recent(self, cfg: "RaasConfig") -> int:
+        """Tokens inside this trailing window are exempt from eviction."""
+        return 0
+
+    def sink_pin(self, has_prefill: bool, cfg: "RaasConfig") -> int:
+        """Pages whose first token position is below this threshold are
+        pinned (StreamingLLM sinks for prompt-less decode)."""
+        return 0
+
+    # -- deployment-time config resolution ----------------------------------
+    def finalize_config(self, cfg: "RaasConfig",
+                        prefill_len: int) -> "RaasConfig":
+        """Resolve static knobs that depend on the serving deployment
+        (e.g. prefill page counts).  Returns a (possibly new) config."""
+        return cfg
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return f"<{type(self).__name__} {self.name!r}>"
+
+
+# ---------------------------------------------------------------------------
+# Registry.
+# ---------------------------------------------------------------------------
+_REGISTRY: Dict[str, SparsityPolicy] = {}
+
+
+def register_policy(name: str):
+    """Class decorator: instantiate and register a policy under ``name``."""
+
+    def deco(cls: Type[SparsityPolicy]) -> Type[SparsityPolicy]:
+        existing = _REGISTRY.get(name)
+        if existing is not None:
+            old = type(existing)
+            # tolerate re-registration only from a module reload of the
+            # same class; distinct classes may not share an id.
+            if (old.__module__, old.__qualname__) != (cls.__module__,
+                                                      cls.__qualname__):
+                raise ValueError(
+                    f"policy id {name!r} already registered by "
+                    f"{old.__module__}.{old.__qualname__}")
+        cls.name = name
+        _REGISTRY[name] = cls()
+        return cls
+
+    return deco
+
+
+def _ensure_builtin_policies() -> None:
+    # Importing the package registers the built-in policy modules.
+    import repro.core.policies  # noqa: F401
+
+
+def get_policy(name: str) -> SparsityPolicy:
+    """Resolve a policy id to its registered singleton."""
+    _ensure_builtin_policies()
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown sparsity policy {name!r}; available: "
+            f"{available_policies()}") from None
+
+
+def available_policies() -> Tuple[str, ...]:
+    _ensure_builtin_policies()
+    return tuple(sorted(_REGISTRY))

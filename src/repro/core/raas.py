@@ -8,8 +8,11 @@ from repro.config import RaasConfig
 from repro.core.attention import decode_attend
 from repro.core.paged_cache import CacheSpec, PagedCache, init_cache, ingest_prefill
 from repro.core.policies import cache_slots, raas_selected_mask
+from repro.core.policy_base import (SparsityPolicy, available_policies,
+                                    get_policy, register_policy)
 
 __all__ = [
     "RaasConfig", "decode_attend", "CacheSpec", "PagedCache",
     "init_cache", "ingest_prefill", "cache_slots", "raas_selected_mask",
+    "SparsityPolicy", "available_policies", "get_policy", "register_policy",
 ]

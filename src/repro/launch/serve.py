@@ -15,6 +15,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.config import RaasConfig, get_config
+from repro.core.policy_base import available_policies
 from repro.data.pipeline import DataConfig, prompt_of, specials, verify_answer
 from repro.models import model as M
 from repro.serving.engine import Engine, Request
@@ -26,7 +27,7 @@ def main(argv=None) -> None:
     p.add_argument("--arch", default="smollm-360m")
     p.add_argument("--reduced", action="store_true", default=True)
     p.add_argument("--policy", default="raas",
-                   choices=["raas", "dense", "quest", "h2o", "streaming"])
+                   choices=list(available_policies()))
     p.add_argument("--budget", type=int, default=128)
     p.add_argument("--requests", type=int, default=8)
     p.add_argument("--slots", type=int, default=4)

@@ -127,15 +127,24 @@ def block_prefill(params: dict, cfg: ModelConfig, h: jnp.ndarray,
 def block_decode(params: dict, cfg: ModelConfig, h: jnp.ndarray,
                  pos: jnp.ndarray, cache: BlockCache, mixer: str,
                  ffn_kind: str, raas: RaasConfig, impl: str = "jnp",
-                 capacity_factor: float = 4.0
-                 ) -> Tuple[jnp.ndarray, BlockCache]:
-    """One-token step.  h [B, D], pos [B] -> (h', cache')."""
+                 capacity_factor: float = 4.0,
+                 policy=None
+                 ) -> Tuple[jnp.ndarray, BlockCache, Optional[object]]:
+    """One-token step.  h [B, D], pos [B] -> (h', cache', stats).
+
+    ``policy`` is the resolved :class:`SparsityPolicy` object (defaults
+    to the registered policy for ``raas.policy``).  ``stats`` is the
+    attention layer's :class:`PolicyStats`, or ``None`` for
+    attention-free mixers.
+    """
+    stats = None
     hn = layers.rmsnorm(params["norm_mixer"], h, cfg.norm_eps)
     if mixer == ATTN:
         q, k, v = layers.qkv_project(
             params["attn"], cfg, hn[:, None], pos[:, None])
-        new_cache, ctx, _stats = core_attention.decode_attend(
-            cache.attn, q[:, 0], k[:, 0], v[:, 0], raas, impl=impl)
+        new_cache, ctx, stats = core_attention.decode_attend(
+            cache.attn, q[:, 0], k[:, 0], v[:, 0], raas, policy=policy,
+            impl=impl)
         h = h + layers.attn_output(params["attn"], ctx[:, None])[:, 0]
         cache = cache._replace(attn=new_cache)
     else:
@@ -145,4 +154,4 @@ def block_decode(params: dict, cfg: ModelConfig, h: jnp.ndarray,
         cache = cache._replace(mamba=mstate)
     h, _aux = _ffn_step(params, cfg, h[:, None], ffn_kind,
                         capacity_factor)
-    return h[:, 0], cache
+    return h[:, 0], cache, stats

@@ -23,7 +23,7 @@ import jax.numpy as jnp
 
 from repro.config import ATTN, ModelConfig, RaasConfig
 from repro.core import paged_cache as pc
-from repro.core import policies
+from repro.core.policy_base import SparsityPolicy, get_policy
 from repro.models import blocks, layers
 
 # Trace-time switch: fully unroll the layer scan.  Used by the dry-run
@@ -144,7 +144,8 @@ class ModelCache(NamedTuple):
 
 def cache_spec(cfg: ModelConfig, raas: RaasConfig, max_seq_len: int,
                prefill_len: int, dtype=jnp.float32) -> pc.CacheSpec:
-    n_slots = policies.cache_slots(raas, max_seq_len, prefill_len)
+    n_slots = get_policy(raas.policy).cache_slots(raas, max_seq_len,
+                                                  prefill_len)
     return pc.CacheSpec(n_slots=n_slots, page_size=raas.page_size,
                         n_kv_heads=cfg.n_kv_heads,
                         head_dim=cfg.resolved_head_dim, dtype=dtype)
@@ -202,26 +203,151 @@ def prefill(params: dict, cfg: ModelConfig, tokens: jnp.ndarray,
 # ---------------------------------------------------------------------------
 # Decode step (the paper's serving loop body)
 # ---------------------------------------------------------------------------
-def decode_step(params: dict, cfg: ModelConfig, token: jnp.ndarray,
-                pos: jnp.ndarray, cache: ModelCache, raas: RaasConfig,
-                impl: str = "jnp") -> Tuple[ModelCache, jnp.ndarray]:
-    """token [B] or [B, C]; pos [B] absolute positions.
+class StepStats(NamedTuple):
+    """Per-decode-step policy observability, aggregated over the
+    attention layers of the stack (all-zero for attention-free models)."""
 
-    Returns (cache', logits [B, (C,) V]).
-    """
+    evictions: jnp.ndarray       # [B] i32 — pages evicted, summed over layers
+    pages_attended: jnp.ndarray  # [B] f32 — mean over layers
+    tokens_cached: jnp.ndarray   # [B] i32 — max over layers
+
+
+def _decode_core(params: dict, cfg: ModelConfig, token: jnp.ndarray,
+                 pos: jnp.ndarray, cache: ModelCache, raas: RaasConfig,
+                 policy: SparsityPolicy, impl: str = "jnp"
+                 ) -> Tuple[ModelCache, jnp.ndarray, StepStats]:
+    """One decode step through the whole stack, with policy stats."""
     if token.ndim == 1:
         token = token[:, None]
+    B = token.shape[0]
     h = _embed(params, cfg, token[:, None, :], None)[:, 0]   # [B, D]
 
     def body(h, xs):
         block_params, block_cache = xs
-        new_caches = []
+        new_caches, stats_list = [], []
         for j, (mixer, ffn_kind) in enumerate(cfg.period):
-            h, new_c = blocks.block_decode(
+            h, new_c, stats = blocks.block_decode(
                 block_params[j], cfg, h, pos, block_cache[j], mixer,
-                ffn_kind, raas, impl=impl)
+                ffn_kind, raas, impl=impl, policy=policy)
             new_caches.append(new_c)
-        return h, tuple(new_caches)
+            if stats is not None:
+                stats_list.append(stats)
+        return h, (tuple(new_caches), tuple(stats_list))
 
-    h, new_per_pos = _scan(body, h, (params["blocks"], cache.per_pos))
-    return ModelCache(per_pos=new_per_pos), _logits(params, cfg, h)
+    h, (new_per_pos, layer_stats) = _scan(
+        body, h, (params["blocks"], cache.per_pos))
+    # each PolicyStats leaf is stacked [n_periods, B] by the layer scan;
+    # aggregate over the period axis and across period positions.
+    if layer_stats:
+        ev = sum(jnp.sum((s.evicted_slot >= 0).astype(jnp.int32), axis=0)
+                 for s in layer_stats)
+        pa = sum(jnp.mean(s.pages_attended.astype(jnp.float32), axis=0)
+                 for s in layer_stats) / len(layer_stats)
+        tc = functools.reduce(
+            jnp.maximum, [jnp.max(s.tokens_cached, axis=0)
+                          for s in layer_stats])
+        stats = StepStats(evictions=ev, pages_attended=pa, tokens_cached=tc)
+    else:
+        zi = jnp.zeros((B,), jnp.int32)
+        stats = StepStats(zi, jnp.zeros((B,), jnp.float32), zi)
+    return ModelCache(per_pos=new_per_pos), _logits(params, cfg, h), stats
+
+
+def decode_step(params: dict, cfg: ModelConfig, token: jnp.ndarray,
+                pos: jnp.ndarray, cache: ModelCache, raas: RaasConfig,
+                impl: str = "jnp",
+                policy: Optional[SparsityPolicy] = None
+                ) -> Tuple[ModelCache, jnp.ndarray]:
+    """token [B] or [B, C]; pos [B] absolute positions.
+
+    Returns (cache', logits [B, (C,) V]).
+    """
+    if policy is None:
+        policy = get_policy(raas.policy)
+    cache, logits, _stats = _decode_core(params, cfg, token, pos, cache,
+                                         raas, policy, impl=impl)
+    return cache, logits
+
+
+# ---------------------------------------------------------------------------
+# Fused multi-step decode (one dispatch per K tokens)
+# ---------------------------------------------------------------------------
+class ChunkResult(NamedTuple):
+    """Device-side result of :func:`decode_chunk`.
+
+    ``tokens``/``emitted`` are per-step: ``tokens[k, b]`` is the greedy
+    token produced at step ``k`` and is meaningful where
+    ``emitted[k, b]`` (the lane was active at the start of the step).
+    The scalar-per-lane fields are the final carry, used by the engine
+    to resume the next chunk without recomputing anything on host.
+    """
+
+    tokens: jnp.ndarray     # [K, B] i32
+    emitted: jnp.ndarray    # [K, B] bool
+    token: jnp.ndarray      # [B] i32 — feed token for the next chunk
+    pos: jnp.ndarray        # [B] i32
+    active: jnp.ndarray     # [B] bool
+    n_emitted: jnp.ndarray  # [B] i32
+    stats: StepStats        # leaves [K, B]
+
+
+def decode_chunk(params: dict, cfg: ModelConfig, cache: ModelCache,
+                 token: jnp.ndarray, pos: jnp.ndarray,
+                 active: jnp.ndarray, n_emitted: jnp.ndarray,
+                 eos_id: jnp.ndarray, max_new: jnp.ndarray,
+                 raas: RaasConfig, *, steps: int, max_seq: int,
+                 impl: str = "jnp",
+                 policy: Optional[SparsityPolicy] = None
+                 ) -> Tuple[ModelCache, ChunkResult]:
+    """Run ``steps`` greedy decode steps inside one ``lax.scan``.
+
+    The engine's hot path: one jit dispatch advances every lane by up
+    to K tokens, with sampling (greedy argmax), EOS / length stopping
+    and per-step stats all on device — the host only syncs at chunk
+    boundaries.  Per-lane dynamic state:
+
+      token      [B] i32   feed token (last sampled, or stale if done)
+      pos        [B] i32   absolute position of the feed token
+      active     [B] bool  lane is generating (False: cache still
+                           advances — garbage rows are overwritten at
+                           the next admit — but token/pos/outputs are
+                           frozen, matching K sequential single steps)
+      n_emitted  [B] i32   tokens emitted so far (incl. the prefill's
+                           first sampled token)
+      eos_id     [B] i32   stop token, -1 = none
+      max_new    [B] i32   per-request new-token budget
+
+    ``steps`` and ``max_seq`` are static.  Token-identical to calling
+    :func:`decode_step` ``steps`` times with host-side argmax and
+    masking (verified by tests/test_serving_chunked.py).
+    """
+    if policy is None:
+        policy = get_policy(raas.policy)
+    if cfg.n_codebooks != 1:
+        raise NotImplementedError(
+            "decode_chunk drives single-codebook LMs; multi-codebook "
+            "decode still goes through decode_step")
+
+    def one(carry, _):
+        cache, token, pos, active, n_emitted = carry
+        cache, logits, stats = _decode_core(params, cfg, token, pos,
+                                            cache, raas, policy, impl=impl)
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)     # [B]
+        emitted = active
+        inc = emitted.astype(jnp.int32)
+        pos = pos + inc
+        n_emitted = n_emitted + inc
+        hit_eos = (eos_id >= 0) & (nxt == eos_id)
+        done = emitted & (hit_eos | (n_emitted >= max_new)
+                          | (pos >= max_seq - 1))
+        token = jnp.where(emitted, nxt, token)
+        return (cache, token, pos, active & ~done, n_emitted), \
+            (nxt, emitted, stats)
+
+    init = (cache, token.astype(jnp.int32), pos.astype(jnp.int32),
+            active, n_emitted.astype(jnp.int32))
+    (cache, token, pos, active, n_emitted), (toks, emitted, stats) = \
+        jax.lax.scan(one, init, None, length=steps)
+    return cache, ChunkResult(tokens=toks, emitted=emitted, token=token,
+                              pos=pos, active=active, n_emitted=n_emitted,
+                              stats=stats)

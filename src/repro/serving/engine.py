@@ -11,9 +11,17 @@ Design:
     assigns queued requests to free lanes.
   * Prefill runs one request at a time (prompts padded to
     ``max_prefill``), its cache rows are spliced into the lane.
-  * One jitted ``decode_step`` advances every active lane; finished
-    lanes (EOS or max_new_tokens) are freed.
-  * Greedy sampling (the paper's math evals are greedy).
+  * The decode hot path is *chunked*: one jitted dispatch of
+    ``models.model.decode_chunk`` advances every active lane by up to
+    ``chunk_steps`` tokens — greedy sampling, EOS / length stopping and
+    position bookkeeping all happen on device, and the host only syncs
+    at chunk boundaries (where the scheduler admits / frees lanes).
+  * All policy semantics dispatch through the resolved
+    :class:`SparsityPolicy` object; the engine knows no policy names.
+
+``dispatches`` counts jitted decode dispatches issued (one per chunk);
+``traces`` counts compilations of the chunk function (one per distinct
+chunk length) — the trace-count test asserts chunks hit the jit cache.
 """
 from __future__ import annotations
 
@@ -25,6 +33,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.config import ModelConfig, RaasConfig
+from repro.core.policy_base import get_policy
 from repro.models import model as M
 
 
@@ -43,11 +52,9 @@ class Engine:
     def __init__(self, params, cfg: ModelConfig, raas: RaasConfig,
                  batch_slots: int = 4, max_seq: int = 1024,
                  max_prefill: int = 128, impl: str = "jnp",
-                 param_dtype=jnp.float32):
-        if raas.policy == "quest_raas" and raas.prefill_pages_hint == 0:
-            raas = dataclasses.replace(
-                raas,
-                prefill_pages_hint=-(-max_prefill // raas.page_size))
+                 param_dtype=jnp.float32, chunk_steps: int = 8):
+        self.policy = get_policy(raas.policy)
+        raas = self.policy.finalize_config(raas, max_prefill)
         self.params = params
         self.cfg = cfg
         self.raas = raas
@@ -55,6 +62,7 @@ class Engine:
         self.max_seq = max_seq
         self.max_prefill = max_prefill
         self.impl = impl
+        self.chunk_steps = chunk_steps
 
         self.cache = M.init_model_cache(cfg, raas, batch_slots, max_seq,
                                         prefill_len=max_prefill,
@@ -62,29 +70,42 @@ class Engine:
         self._fresh_row = M.init_model_cache(cfg, raas, 1, max_seq,
                                              prefill_len=max_prefill,
                                              dtype=param_dtype)
-        self.pos = np.zeros(batch_slots, np.int64)
+        self.pos = np.zeros(batch_slots, np.int32)
         self.slot_req: List[Optional[Request]] = [None] * batch_slots
         self.last_token = np.zeros(batch_slots, np.int32)
-        self.steps_executed = 0
+        self.active = np.zeros(batch_slots, bool)
+        self.n_emitted = np.zeros(batch_slots, np.int32)
+        self.eos_id = np.full(batch_slots, -1, np.int32)
+        self.max_new = np.zeros(batch_slots, np.int32)
+        self.steps_executed = 0     # decode steps (tokens per lane)
+        self.dispatches = 0         # jitted chunk dispatches issued
+        self.traces = 0             # chunk-fn compilations
 
-        raas_cfg, cfg_, impl_ = raas, cfg, impl
+        raas_cfg, cfg_, impl_, policy = raas, cfg, impl, self.policy
 
         @jax.jit
         def _prefill(params, cache_row, tokens, length):
             return M.prefill(params, cfg_, tokens, length, cache_row,
                              impl=impl_)
 
-        @jax.jit
-        def _decode(params, cache, token, pos):
-            return M.decode_step(params, cfg_, token, pos, cache,
-                                 raas_cfg, impl=impl_)
+        def _chunk(params, cache, token, pos, active, n_emitted,
+                   eos_id, max_new, steps):
+            self.traces += 1        # runs at trace time only
+            return M.decode_chunk(params, cfg_, cache, token, pos,
+                                  active, n_emitted, eos_id, max_new,
+                                  raas_cfg, steps=steps,
+                                  max_seq=self.max_seq, impl=impl_,
+                                  policy=policy)
 
         self._prefill_fn = _prefill
-        self._decode_fn = _decode
+        self._chunk_fn = jax.jit(_chunk, static_argnames=("steps",))
 
     # -- slot management -----------------------------------------------------
     def free_slots(self) -> List[int]:
         return [i for i, r in enumerate(self.slot_req) if r is None]
+
+    def has_active(self) -> bool:
+        return any(r is not None for r in self.slot_req)
 
     def _splice_row(self, slot: int, row_cache) -> None:
         self.cache = jax.tree.map(
@@ -108,6 +129,10 @@ class Engine:
         self.slot_req[slot] = req
         self.pos[slot] = L
         self.last_token[slot] = nxt
+        self.active[slot] = True
+        self.n_emitted[slot] = 1
+        self.eos_id[slot] = -1 if req.eos_id is None else req.eos_id
+        self.max_new[slot] = req.max_new_tokens
         req.output.append(nxt)
 
     def _finish(self, slot: int) -> None:
@@ -116,34 +141,52 @@ class Engine:
         self.slot_req[slot] = None
 
     # -- decode ----------------------------------------------------------------
-    def step(self) -> None:
-        """One decode step for all active lanes."""
-        active = [i for i, r in enumerate(self.slot_req) if r is not None]
-        if not active:
-            return
-        token = jnp.asarray(self.last_token)
-        pos = jnp.asarray(self.pos.astype(np.int32))
-        self.cache, logits = self._decode_fn(self.params, self.cache,
-                                             token, pos)
-        nxt = np.asarray(jnp.argmax(logits, axis=-1)).reshape(self.B, -1)
-        self.steps_executed += 1
-        for slot in active:
+    def step_chunk(self, steps: Optional[int] = None) -> List[Request]:
+        """Advance every active lane by up to ``steps`` tokens in ONE
+        jitted dispatch; sync host state at the boundary and free
+        finished lanes.  Returns the requests that finished."""
+        steps = self.chunk_steps if steps is None else steps
+        slots = [i for i, r in enumerate(self.slot_req) if r is not None]
+        if not slots:
+            return []
+        self.dispatches += 1
+        self.cache, out = self._chunk_fn(
+            self.params, self.cache,
+            jnp.asarray(self.last_token), jnp.asarray(self.pos),
+            jnp.asarray(self.active), jnp.asarray(self.n_emitted),
+            jnp.asarray(self.eos_id), jnp.asarray(self.max_new),
+            steps=steps)
+        toks = np.asarray(out.tokens)          # [K, B]
+        emitted = np.asarray(out.emitted)      # [K, B]
+        self.last_token = np.asarray(out.token).astype(np.int32)
+        self.pos = np.asarray(out.pos).astype(np.int32)
+        self.n_emitted = np.asarray(out.n_emitted).astype(np.int32)
+        self.active = np.asarray(out.active).copy()
+        self.steps_executed += steps
+        finished: List[Request] = []
+        for slot in slots:
             req = self.slot_req[slot]
-            tok = int(nxt[slot][0])
-            req.output.append(tok)
-            self.pos[slot] += 1
-            self.last_token[slot] = tok
-            if ((req.eos_id is not None and tok == req.eos_id)
-                    or len(req.output) >= req.max_new_tokens
-                    or self.pos[slot] >= self.max_seq - 1):
+            for k in range(steps):
+                if emitted[k, slot]:
+                    req.output.append(int(toks[k, slot]))
+            if not self.active[slot]:
                 self._finish(slot)
+                finished.append(req)
+        return finished
+
+    def step(self) -> List[Request]:
+        """One decode step for all active lanes (a chunk of 1)."""
+        return self.step_chunk(1)
 
     # -- memory accounting (paper Fig. 7) -------------------------------------
     def kv_cache_bytes(self) -> int:
+        """Real per-engine KV-cache footprint: K/V pages PLUS the
+        representative keys (rep_min/rep_max) and the per-page metadata
+        arrays (priority / page_pos / page_len / pinned / active_slot /
+        cur_len) — everything the paged cache allocates per lane."""
         total = 0
         for pos_cache in self.cache.per_pos:
             if pos_cache.attn is None:
                 continue
-            total += pos_cache.attn.k_pages.nbytes
-            total += pos_cache.attn.v_pages.nbytes
+            total += sum(x.nbytes for x in jax.tree.leaves(pos_cache.attn))
         return total

@@ -1,33 +1,40 @@
 """FIFO request scheduler over the engine's decode lanes.
 
-Continuous batching: whenever a lane frees up and the queue is
-non-empty, the next request is prefilled and admitted; decode steps
-advance all active lanes together.  This is the standard
-vLLM/SGLang-style loop reduced to its essentials — the paper's
-contribution (bounded per-lane KV memory) is what makes ``batch_slots``
-scale with HBM instead of with the longest chain-of-thought.
+Continuous batching at chunk granularity: whenever a lane frees up and
+the queue is non-empty, the next request is prefilled and admitted;
+then one fused dispatch (``Engine.step_chunk``) advances every active
+lane by up to ``chunk_steps`` tokens.  Admission and freeing happen
+only at chunk boundaries — between dispatches the device never syncs
+to host.  This is the standard vLLM/SGLang-style loop reduced to its
+essentials — the paper's contribution (bounded per-lane KV memory) is
+what makes ``batch_slots`` scale with HBM instead of with the longest
+chain-of-thought.
+
+Completion tracking is O(1) per finished request: ``step_chunk``
+returns the requests it finished (each exactly once — a finished lane
+is freed before it can finish again).
 """
 from __future__ import annotations
 
 from collections import deque
-from typing import Iterable, List
+from typing import Iterable, List, Optional
 
 from repro.serving.engine import Engine, Request
 
 
 def serve(engine: Engine, requests: Iterable[Request],
-          max_steps: int = 100_000) -> List[Request]:
+          max_steps: int = 100_000,
+          chunk_steps: Optional[int] = None) -> List[Request]:
+    """Run ``requests`` to completion.  ``max_steps`` bounds the total
+    number of decode steps (tokens per lane); ``chunk_steps`` overrides
+    the engine's chunk length."""
     queue = deque(requests)
     done: List[Request] = []
-    pending = list(queue)
     steps = 0
-    while (queue or any(r is not None for r in engine.slot_req)) \
-            and steps < max_steps:
+    while (queue or engine.has_active()) and steps < max_steps:
         while queue and engine.free_slots():
             engine.admit(queue.popleft())
-        engine.step()
-        steps += 1
-        for r in pending:
-            if r.done and r not in done:
-                done.append(r)
+        before = engine.steps_executed
+        done.extend(engine.step_chunk(chunk_steps))
+        steps += max(engine.steps_executed - before, 1)
     return done

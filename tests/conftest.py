@@ -1,0 +1,31 @@
+"""Shared pytest configuration.
+
+When ``REPRO_CI=1`` (set by the GitHub Actions workflow), the seed's
+known kernel failures listed in ``tests/known_failures.txt`` are
+marked ``xfail`` — the CPU-only runner cannot exercise the Pallas TPU
+kernels — so a regression in any currently-passing test fails the
+build while the known list stays explicit and auditable.  Local runs
+are unaffected.
+"""
+import os
+from pathlib import Path
+
+import pytest
+
+
+def _known_failures():
+    path = Path(__file__).with_name("known_failures.txt")
+    return {line.strip() for line in path.read_text().splitlines()
+            if line.strip() and not line.startswith("#")}
+
+
+def pytest_collection_modifyitems(config, items):
+    if not os.environ.get("REPRO_CI"):
+        return
+    known = _known_failures()
+    for item in items:
+        if item.nodeid in known:
+            item.add_marker(pytest.mark.xfail(
+                reason="known seed kernel failure "
+                       "(see tests/known_failures.txt)",
+                strict=False))

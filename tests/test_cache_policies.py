@@ -10,16 +10,43 @@ asserts the system invariants that make RaaS the paper's contribution:
     window over decode pages,
   * cache contents always mirror a token-level reference simulator.
 """
+import functools
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:
+    # hypothesis is a dev-only dependency: the property tests below
+    # skip cleanly when it is absent so collection never breaks.
+    _SKIP = pytest.mark.skip(reason="hypothesis not installed")
+
+    def given(*_a, **_k):
+        def deco(fn):
+            @_SKIP
+            @functools.wraps(fn)
+            def stub(*args, **kwargs):
+                raise AssertionError("unreachable: test is skipped")
+            return stub
+        return deco
+
+    def settings(*_a, **_k):
+        return lambda fn: fn
+
+    class _Strategies:
+        def __getattr__(self, _name):
+            return lambda *a, **k: None
+
+    st = _Strategies()
 
 from repro.config import RaasConfig
 from repro.core import paged_cache as pc
 from repro.core import policies
 from repro.core.attention import decode_attend
+from repro.core.policy_base import get_policy
 
 
 def _mk_cache(n_slots, P=4, KV=2, hd=8, B=1):
@@ -137,8 +164,8 @@ def test_policy_invariants(policy, budget_pages, prefill_len, n_decode,
     P, KV, hd, B = 4, 2, 8, 1
     cfg = RaasConfig(policy=policy, budget_tokens=budget_pages * P,
                      page_size=P, h2o_recent=4)
-    n_slots = policies.cache_slots(cfg, prefill_len + n_decode,
-                                   prefill_len)
+    n_slots = get_policy(cfg.policy).cache_slots(cfg, prefill_len + n_decode,
+                                                 prefill_len)
     spec = pc.CacheSpec(n_slots, P, KV, hd, jnp.float32)
     cache = pc.init_cache(spec, B)
     rng = np.random.default_rng(seed)
