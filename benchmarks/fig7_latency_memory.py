@@ -1,23 +1,38 @@
-"""Paper Fig. 7 proxy: per-step latency and KV memory vs decode length,
-plus the serving-stack dispatch-overhead sweep.
+"""Paper Fig. 7 proxy: per-step latency, attention traffic and KV
+memory vs decode length, plus the serving-stack dispatch-overhead
+sweep.  Emits a machine-readable ``BENCH_fig7.json`` at the repo root
+so the perf trajectory is tracked across PRs.
 
 Claims reproduced:
   * Dense decode step cost grows with N (O(N) per step, O(N^2) total);
     RaaS/Quest per-step cost is O(L), flat in N.
   * Dense and Quest KV memory grow linearly with N; RaaS plateaus at
     the budget L.
+  * Zero-copy kernel traffic: the index-mapped paged kernel streams
+    exactly the selected page table — ``attn_bytes_kernel`` (the
+    kernel's analytic HBM traffic, exact by construction from its
+    grid x BlockSpecs) is flat in N for RaaS and Quest at fixed budget
+    L and grows linearly for dense.
   * Fused multi-token decode: one jitted dispatch per K tokens —
     tokens/sec at K=1 vs K=8/16/32 quantifies the per-token dispatch +
     host-round-trip overhead the chunked engine removes (jnp backend).
 
-Latency here is measured wall-clock on CPU for the *attention step*
-shapes at growing cache sizes; memory is the exact static allocation
-of each policy's cache — every array of it, including rep keys and
-page metadata (which is the paper's point — it is static).
+Wall-clock is measured on CPU for the *attention step* at growing
+cache sizes, on both the jnp oracle and the Pallas interpret backend;
+memory is the exact static allocation of each policy's cache — every
+array of it, including rep keys and page metadata (which is the
+paper's point — it is static).  ``cost_bytes_step_jnp`` is XLA's
+HloCostAnalysis "bytes accessed" for the whole jitted decode step on
+the jnp backend; note XLA charges a gather its full operand, so this
+column overstates O(N)-slot policies (quest) — the kernel-native
+column is the honest traffic number, and for RaaS (fixed O(L) shapes)
+the two agree on flatness.
 """
 from __future__ import annotations
 
+import json
 import time
+from pathlib import Path
 from typing import Dict
 
 import jax
@@ -29,17 +44,21 @@ from repro.config import RaasConfig
 from repro.core import paged_cache as pc
 from repro.core.attention import decode_attend
 from repro.core.policy_base import get_policy
+from repro.kernels import ops
 from repro.models import model as M
 
 DECODE_LENS = [256, 512, 1024, 2048, 4096, 8192]
 BUDGET = 512
 CHUNK_KS = [1, 8, 16, 32]
+OUT_PATH = Path(__file__).resolve().parent.parent / "BENCH_fig7.json"
 
 
-def _bench_step(policy: str, n_ctx: int, iters: int = 20) -> Dict:
+def _bench_step(policy: str, n_ctx: int, iters: int = 20,
+                iters_interpret: int = 3) -> Dict:
     cfg = BENCH_MODEL
     raas = policy_cfg(policy, BUDGET, page_size=16)
-    n_slots = get_policy(policy).cache_slots(raas, n_ctx + iters + 1, 64)
+    pol = get_policy(policy)
+    n_slots = pol.cache_slots(raas, n_ctx + iters + 1, 64)
     spec = pc.CacheSpec(n_slots, raas.page_size, cfg.n_kv_heads,
                         cfg.resolved_head_dim, jnp.float32)
     cache = pc.init_cache(spec, 1)
@@ -50,21 +69,56 @@ def _bench_step(policy: str, n_ctx: int, iters: int = 20) -> Dict:
                     jnp.float32)
     cache = pc.ingest_prefill(cache, k, k,
                               jnp.asarray([min(n_ctx, 64)]))
-    step = jax.jit(lambda c, q, kn, vn: decode_attend(c, q, kn, vn, raas))
     q = jnp.asarray(rng.standard_normal((1, H, hd)), jnp.float32)
     kn = jnp.asarray(rng.standard_normal((1, KV, hd)), jnp.float32)
+    # AOT-compile once per (policy, ctx): the same executable serves
+    # the fill loop, the timing loop, and cost_analysis.
+    step_c = jax.jit(
+        lambda c, q, kn, vn: decode_attend(c, q, kn, vn, raas)) \
+        .lower(cache, q, kn, kn).compile()
     # fill to n_ctx
     for _ in range(min(n_ctx, n_slots * raas.page_size // 2)):
-        cache, _, _ = step(cache, q, kn, kn)
+        cache, _, _ = step_c(cache, q, kn, kn)
     jax.block_until_ready(cache.k_pages)
-    t0 = time.perf_counter()
-    for _ in range(iters):
-        cache, ctx, _ = step(cache, q, kn, kn)
-    jax.block_until_ready(ctx)
-    us = (time.perf_counter() - t0) / iters * 1e6
+
+    def timed(fn, cache, iters):
+        c = cache
+        c, ctx, _ = fn(c, q, kn, kn)          # warm up
+        jax.block_until_ready(ctx)
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            c, ctx, _ = fn(c, q, kn, kn)
+        jax.block_until_ready(ctx)
+        return (time.perf_counter() - t0) / iters * 1e6
+
+    us_jnp = timed(step_c, cache, iters)
+    step_interp = jax.jit(lambda c, q, kn, vn: decode_attend(
+        c, q, kn, vn, raas, impl="pallas_interpret"))
+    us_interp = timed(step_interp, cache, iters_interpret)
+
+    # the selection table the kernel would stream (policy-agnostic:
+    # ask the policy itself against the real scores)
+    scale = 1.0 / hd ** 0.5
+    scores = ops.page_score(q, cache.rep_min, cache.rep_max,
+                            cache.valid_pages(), scale)
+    sel = pol.select_pages(cache, scores, raas)
+    n_sel = n_slots if sel is None else int(sel.shape[1])
+    kcost = ops.paged_decode_attention_cost(
+        B=1, KV=KV, G=H // KV, hd=hd, P=raas.page_size, n_sel=n_sel)
+
+    cost = step_c.cost_analysis()
+    if isinstance(cost, list):
+        cost = cost[0]
+
     # full footprint: K/V pages + rep keys + per-page metadata
     kv_bytes = sum(x.nbytes for x in jax.tree.leaves(cache))
-    return {"us_per_step": us, "kv_bytes": kv_bytes}
+    return {"us_per_step_jnp": us_jnp,
+            "us_per_step_pallas_interpret": us_interp,
+            "kv_bytes": kv_bytes,
+            "n_sel_pages": n_sel,
+            "attn_bytes_kernel": kcost["bytes_accessed"],
+            "attn_flops_kernel": kcost["flops"],
+            "cost_bytes_step_jnp": float(cost.get("bytes accessed", -1.0))}
 
 
 def _bench_chunked(k_steps: int, n_tokens: int = 128,
@@ -117,20 +171,52 @@ def _bench_chunked(k_steps: int, n_tokens: int = 128,
             "dispatches": n_tokens // k_steps}
 
 
+def _assert_claims(rows) -> None:
+    by = lambda p: [r for r in rows if r["policy"] == p]
+    raas, quest, dense = by("raas"), by("quest"), by("dense")
+    # memory: RaaS plateaus, dense grows
+    assert raas[-1]["kv_bytes"] == raas[2]["kv_bytes"], \
+        "RaaS memory must plateau"
+    assert dense[-1]["kv_bytes"] > 4 * dense[0]["kv_bytes"], \
+        "Dense memory must grow"
+    # zero-copy kernel traffic: flat in N for the O(L)-time policies
+    # (once N exceeds the budget L — below it the table is smaller)...
+    for name, rs in (("raas", raas), ("quest", quest)):
+        vals = [r["attn_bytes_kernel"] for r in rs if r["ctx"] >= BUDGET]
+        assert max(vals) <= 1.05 * min(vals), \
+            f"{name} kernel attention bytes must be flat in N: {vals}"
+    # ... and O(N) for dense
+    assert dense[-1]["attn_bytes_kernel"] > 4 * dense[0]["attn_bytes_kernel"]
+    # RaaS runs on O(L)-pinned shapes: the whole jitted step's cost-model
+    # traffic is exactly constant in N
+    vals = [r["cost_bytes_step_jnp"] for r in raas]
+    assert max(vals) <= 1.01 * min(vals), \
+        f"raas step bytes must be flat in N: {vals}"
+    # wall-clock (CPU; generous margins — deterministic claims live in
+    # the bytes columns above): RaaS shapes are pinned at the budget so
+    # its step time is flat on both backends; Quest attends O(L) but
+    # pays an O(N) rep scan + top-k, so it must stay well below dense
+    # at the longest decode even if not perfectly flat.
+    for col in ("us_per_step_jnp", "us_per_step_pallas_interpret"):
+        vals = [r[col] for r in raas]
+        assert vals[-1] <= 5.0 * min(vals), \
+            f"raas {col} should be flat in N: {vals}"
+    assert quest[-1]["us_per_step_jnp"] < dense[-1]["us_per_step_jnp"], \
+        "quest per-step latency must beat dense at the longest decode"
+
+
 def run() -> Dict:
     rows = []
     for policy in ["dense", "quest", "raas"]:
         for n in DECODE_LENS:
             r = _bench_step(policy, n)
             name = f"fig7/{policy}-ctx{n}"
-            print(f"{name},{r['us_per_step']:.0f},"
-                  f"kv_mb={r['kv_bytes']/1e6:.2f}", flush=True)
+            print(f"{name},{r['us_per_step_jnp']:.0f}us,"
+                  f"interp={r['us_per_step_pallas_interpret']:.0f}us,"
+                  f"kv_mb={r['kv_bytes']/1e6:.2f},"
+                  f"attn_kb={r['attn_bytes_kernel']/1e3:.1f}", flush=True)
             rows.append({"policy": policy, "ctx": n, **r})
-    # the paper's claims, asserted:
-    raas_mem = [r["kv_bytes"] for r in rows if r["policy"] == "raas"]
-    dense_mem = [r["kv_bytes"] for r in rows if r["policy"] == "dense"]
-    assert raas_mem[-1] == raas_mem[2], "RaaS memory must plateau"
-    assert dense_mem[-1] > 4 * dense_mem[0], "Dense memory must grow"
+    _assert_claims(rows)
     # dispatch-overhead sweep: tokens/sec vs chunk length
     chunk_rows = []
     for k in CHUNK_KS:
@@ -142,7 +228,13 @@ def run() -> Dict:
     for r in chunk_rows[1:]:
         print(f"fig7/chunked-K{r['k']}-speedup,"
               f"{r['tok_per_s']/base:.2f}x", flush=True)
-    return {"rows": rows, "chunked": chunk_rows}
+    result = {"schema": "fig7/v2-zero-copy",
+              "budget_tokens": BUDGET,
+              "decode_lens": DECODE_LENS,
+              "rows": rows, "chunked": chunk_rows}
+    OUT_PATH.write_text(json.dumps(result, indent=2) + "\n")
+    print(f"fig7: wrote {OUT_PATH}", flush=True)
+    return result
 
 
 if __name__ == "__main__":

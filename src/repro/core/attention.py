@@ -6,15 +6,23 @@
      evicting per the policy's priorities — RaaS Figure 5 semantics),
   2. scores pages against the query via representative keys
      (Quest-style min/max bound, paper §3.3),
-  3. selects pages (Quest top-k; others attend the whole live cache —
-     for RaaS the live cache *is* the O(L) retained set),
-  4. runs the paged attention kernel (Pallas on TPU, jnp oracle on
-     CPU) which also emits true per-page probability mass,
+  3. asks the policy *which* pages to attend — the answer is an i32
+     index table (Quest top-k; ``None`` = identity = the whole live
+     cache, which for RaaS *is* the O(L) retained set),
+  4. runs the paged attention kernel on the cache **in place**: the
+     table is handed to the kernel (Pallas scalar prefetch / oracle
+     gather), so no gathered KV copy is ever materialized here, and
+     the kernel emits true per-page probability mass alongside the
+     context,
   5. refreshes priorities (RaaS timestamps / H2O accumulation).
 
 Everything is one fused jittable function of the cache pytree.  All
 policy semantics enter through the :class:`SparsityPolicy` object —
-this module contains no per-policy branches.
+this module contains no per-policy branches.  There is also no
+scatter-back of page probabilities: non-selecting policies get them in
+slot space straight from the kernel, and no built-in policy both
+selects pages and consumes them (``SparsityPolicy.uses_page_probs``
+gates the generic O(S)-scalar fallback for out-of-tree combinations).
 """
 from __future__ import annotations
 
@@ -68,35 +76,32 @@ def decode_attend(cache: pc.PagedCache, q: jnp.ndarray, k_new: jnp.ndarray,
         scores = ops.page_score(q, cache.rep_min, cache.rep_max, valid,
                                 scale, impl=impl)
 
-    # -- 3. page selection ---------------------------------------------------
+    # -- 3./4. page selection as an index table + in-place attention -------
     sel_idx = policy.select_pages(cache, scores, cfg)
-    token_mask = cache.token_mask()
-    if sel_idx is None:
-        k_sel, v_sel, mask_sel = cache.k_pages, cache.v_pages, token_mask
-    else:
-        barange = jnp.arange(B)[:, None]
-        k_sel = cache.k_pages[barange, sel_idx]
-        v_sel = cache.v_pages[barange, sel_idx]
-        mask_sel = token_mask[barange, sel_idx]
-
-    # -- 4. paged attention + true per-page probability mass ---------------
     ctx, page_probs_sel = ops.paged_decode_attention(
-        q, k_sel, v_sel, mask_sel, scale, impl=impl)
+        q, cache.k_pages, cache.v_pages, cache.page_len, sel_idx, scale,
+        impl=impl)
 
-    # scatter per-page probs back to full slot space (H2O's signal)
     if sel_idx is None:
+        # identity table: the kernel's page probs are already slot space
         page_probs = page_probs_sel
+        sel_len = cache.page_len
     else:
-        page_probs = jnp.zeros(valid.shape, jnp.float32)
-        page_probs = page_probs.at[jnp.arange(B)[:, None], sel_idx].add(
-            page_probs_sel)
+        sel_len = jnp.take_along_axis(cache.page_len, sel_idx, axis=1)
+        if policy.uses_page_probs:
+            # generic fallback for out-of-tree policies that both select
+            # and consume probs; no built-in policy reaches this branch.
+            page_probs = jnp.zeros(valid.shape, jnp.float32).at[
+                jnp.arange(B)[:, None], sel_idx].add(page_probs_sel)
+        else:
+            page_probs = jnp.zeros(valid.shape, jnp.float32)
 
     # -- 5. priority refresh -------------------------------------------------
     cache = policy.refresh_priority(cache, scores, page_probs, cfg)
 
     stats = PolicyStats(
         evicted_slot=evicted,
-        pages_attended=(mask_sel.any(-1)).sum(-1).astype(jnp.int32),
+        pages_attended=(sel_len > 0).sum(-1).astype(jnp.int32),
         tokens_cached=cache.tokens_cached(),
     )
     return cache, ctx, stats

@@ -4,8 +4,8 @@ The reference RaaS implementation (HF + Quest CUDA) allocates/frees KV
 pages dynamically on the host.  On TPU under jit everything must be
 static-shape, so "eviction" here means *overwriting a victim slot*:
 
-    k_pages / v_pages  [B, S, P, KV, hd]   S = n_slots, P = page_size
-    rep_min / rep_max  [B, S, KV, hd]      Quest representative keys
+    k_pages / v_pages  [B, KV, S, P, hd]   S = n_slots, P = page_size
+    rep_min / rep_max  [B, KV, S, hd]      Quest representative keys
     priority           [B, S] f32          policy-specific eviction key
     page_pos           [B, S] i32          first-token position, -1 = free
     page_len           [B, S] i32          tokens filled (0..P)
@@ -13,10 +13,24 @@ static-shape, so "eviction" here means *overwriting a victim slot*:
     active_slot        [B]    i32          slot currently being filled (-1)
     cur_len            [B]    i32          tokens written so far
 
-All operations are O(S) vector ops per decode step — fully jittable,
-batched, and shardable on the batch axis.  The policy layer
-(policies.py) decides priorities; this module only knows "evict argmin
-priority among unpinned".
+DESIGN — kernel-native page-major layout
+========================================
+``k_pages``/``v_pages`` are stored **page-major per kv-head**:
+``[B, KV, S, P, hd]``.  This is the exact layout the Pallas decode
+kernel (:mod:`repro.kernels.paged_attention`) indexes with its
+``(batch, kv_head, page)`` grid, so the kernel's ``index_map`` can
+resolve any page slot straight out of HBM — no reshape, no transpose,
+no gathered copy is ever made of the cache.  The representative keys
+mirror it (``[B, KV, S, hd]``) for the same reason: the page-score
+kernel blocks over the slot axis with the kv-head axis already
+outermost.  Live tokens always occupy a *prefix* of each page
+(``page_len`` of them); that prefix contract is what lets the kernels
+mask with a single per-page length instead of a per-token mask.
+
+All slot-metadata operations are O(S) vector ops per decode step —
+fully jittable, batched, and shardable on the batch axis.  The policy
+layer (policies/) decides priorities; this module only knows "evict
+argmin priority among unpinned".
 """
 from __future__ import annotations
 
@@ -43,10 +57,10 @@ class CacheSpec(NamedTuple):
 
 
 class PagedCache(NamedTuple):
-    k_pages: jnp.ndarray    # [B, S, P, KV, hd]
-    v_pages: jnp.ndarray    # [B, S, P, KV, hd]
-    rep_min: jnp.ndarray    # [B, S, KV, hd] f32
-    rep_max: jnp.ndarray    # [B, S, KV, hd] f32
+    k_pages: jnp.ndarray    # [B, KV, S, P, hd]
+    v_pages: jnp.ndarray    # [B, KV, S, P, hd]
+    rep_min: jnp.ndarray    # [B, KV, S, hd] f32
+    rep_max: jnp.ndarray    # [B, KV, S, hd] f32
     priority: jnp.ndarray   # [B, S] f32
     page_pos: jnp.ndarray   # [B, S] i32 (-1 = free)
     page_len: jnp.ndarray   # [B, S] i32
@@ -58,13 +72,21 @@ class PagedCache(NamedTuple):
     def batch(self) -> int:
         return self.k_pages.shape[0]
 
+    @property
+    def n_slots(self) -> int:
+        return self.k_pages.shape[2]
+
+    @property
+    def page_size(self) -> int:
+        return self.k_pages.shape[3]
+
     def valid_pages(self) -> jnp.ndarray:
         """[B, S] bool — slots holding at least one token."""
         return self.page_len > 0
 
     def token_mask(self) -> jnp.ndarray:
-        """[B, S, P] bool — live token positions."""
-        P = self.k_pages.shape[2]
+        """[B, S, P] bool — live token positions (prefix per page)."""
+        P = self.page_size
         return jnp.arange(P)[None, None, :] < self.page_len[:, :, None]
 
     def tokens_cached(self) -> jnp.ndarray:
@@ -76,10 +98,10 @@ def init_cache(spec: CacheSpec, batch: int) -> PagedCache:
     S, P, KV, hd = spec.n_slots, spec.page_size, spec.n_kv_heads, spec.head_dim
     z = lambda *shape: jnp.zeros(shape, spec.dtype)
     return PagedCache(
-        k_pages=z(batch, S, P, KV, hd),
-        v_pages=z(batch, S, P, KV, hd),
-        rep_min=jnp.full((batch, S, KV, hd), INF, jnp.float32),
-        rep_max=jnp.full((batch, S, KV, hd), -INF, jnp.float32),
+        k_pages=z(batch, KV, S, P, hd),
+        v_pages=z(batch, KV, S, P, hd),
+        rep_min=jnp.full((batch, KV, S, hd), INF, jnp.float32),
+        rep_max=jnp.full((batch, KV, S, hd), -INF, jnp.float32),
         priority=jnp.zeros((batch, S), jnp.float32),
         page_pos=jnp.full((batch, S), -1, jnp.int32),
         page_len=jnp.zeros((batch, S), jnp.int32),
@@ -93,16 +115,19 @@ def ingest_prefill(cache: PagedCache, k: jnp.ndarray, v: jnp.ndarray,
                    lengths: jnp.ndarray, pin: bool = True) -> PagedCache:
     """Pack prefill keys/values into the first ceil(len/P) slots.
 
-    k, v: [B, S_pre, KV, hd] (post-RoPE).  ``lengths``: [B] i32 actual
-    prefill length per sequence (ragged batches supported; positions
-    >= length are ignored).  Prefill pages are pinned (paper §3.2: all
-    prefill tokens are retained; phoenix tokens live there).
+    k, v: [B, S_pre, KV, hd] (post-RoPE, token-major as produced by the
+    projection).  The one-shot transpose into the page-major cache
+    layout happens here — at prefill time, once per sequence — so the
+    per-step decode path never rearranges KV bytes.  ``lengths``: [B]
+    i32 actual prefill length per sequence (ragged batches supported;
+    positions >= length are ignored).  Prefill pages are pinned (paper
+    §3.2: all prefill tokens are retained; phoenix tokens live there).
 
     Decode tokens never share a page with prefill: ``active_slot`` is
     left at -1 so the first appended token allocates a fresh page.
     """
     B, S_pre, KV, hd = k.shape
-    S, P = cache.k_pages.shape[1], cache.k_pages.shape[2]
+    S, P = cache.n_slots, cache.page_size
     n_pre_pages = -(-S_pre // P)
     if n_pre_pages > S:
         raise ValueError(
@@ -112,8 +137,8 @@ def ingest_prefill(cache: PagedCache, k: jnp.ndarray, v: jnp.ndarray,
     pad = n_pre_pages * P - S_pre
     kp = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
     vp = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
-    kp = kp.reshape(B, n_pre_pages, P, KV, hd).astype(cache.k_pages.dtype)
-    vp = vp.reshape(B, n_pre_pages, P, KV, hd).astype(cache.v_pages.dtype)
+    kp = kp.reshape(B, n_pre_pages, P, KV, hd)       # token-major pages
+    vp = vp.reshape(B, n_pre_pages, P, KV, hd)
 
     pos_in_seq = (jnp.arange(n_pre_pages * P)
                   .reshape(n_pre_pages, P))                       # [pages, P]
@@ -123,19 +148,22 @@ def ingest_prefill(cache: PagedCache, k: jnp.ndarray, v: jnp.ndarray,
     ppos = jnp.where(plen > 0, ppos, -1)
 
     kf = jnp.where(live[..., None, None], kp.astype(jnp.float32), INF)
-    rep_min = kf.min(axis=2)                                      # [B,pages,KV,hd]
+    rep_min = kf.min(axis=2).transpose(0, 2, 1, 3)        # [B,KV,pages,hd]
     kf = jnp.where(live[..., None, None], kp.astype(jnp.float32), -INF)
-    rep_max = kf.max(axis=2)
+    rep_max = kf.max(axis=2).transpose(0, 2, 1, 3)
 
-    k_pages = cache.k_pages.at[:, :n_pre_pages].set(
-        jnp.where(live[..., None, None], kp, 0))
-    v_pages = cache.v_pages.at[:, :n_pre_pages].set(
-        jnp.where(live[..., None, None], vp, 0))
+    # page-major, kv-head-outermost: [B, KV, pages, P, hd]
+    kp = jnp.where(live[..., None, None], kp, 0).transpose(0, 3, 1, 2, 4)
+    vp = jnp.where(live[..., None, None], vp, 0).transpose(0, 3, 1, 2, 4)
+    k_pages = cache.k_pages.at[:, :, :n_pre_pages].set(
+        kp.astype(cache.k_pages.dtype))
+    v_pages = cache.v_pages.at[:, :, :n_pre_pages].set(
+        vp.astype(cache.v_pages.dtype))
     return cache._replace(
         k_pages=k_pages,
         v_pages=v_pages,
-        rep_min=cache.rep_min.at[:, :n_pre_pages].set(rep_min),
-        rep_max=cache.rep_max.at[:, :n_pre_pages].set(rep_max),
+        rep_min=cache.rep_min.at[:, :, :n_pre_pages].set(rep_min),
+        rep_max=cache.rep_max.at[:, :, :n_pre_pages].set(rep_max),
         priority=cache.priority.at[:, :n_pre_pages].set(
             jnp.where(plen > 0, ppos.astype(jnp.float32), 0.0)),
         page_pos=cache.page_pos.at[:, :n_pre_pages].set(ppos),
@@ -187,11 +215,14 @@ def append_token(cache: PagedCache, k_new: jnp.ndarray, v_new: jnp.ndarray,
     pins pages whose first token position is below the threshold
     (StreamingLLM sink behaviour for prompt-less decode).
 
+    The KV write is a single-slot in-place update of the page-major
+    cache (O(P) bytes per kv head) — never a copy of other pages.
+
     Returns (cache, evicted_slot [B] i32; -1 where no eviction happened
     — i.e. a free slot was used or the active page had room).
     """
     B, KV, hd = k_new.shape
-    S, P = cache.k_pages.shape[1], cache.k_pages.shape[2]
+    S, P = cache.n_slots, cache.page_size
     barange = jnp.arange(B)
 
     active = cache.active_slot
@@ -212,12 +243,14 @@ def append_token(cache: PagedCache, k_new: jnp.ndarray, v_new: jnp.ndarray,
         jnp.where(need_alloc, cache.cur_len, cache.page_pos[barange, slot]))
     page_len = cache.page_len.at[barange, slot].set(
         jnp.where(need_alloc, 0, cache.page_len[barange, slot]))
-    rep_min = cache.rep_min.at[barange, slot].set(
+    # NB mixed advanced/basic indexing [barange, :, slot] broadcasts the
+    # advanced axes to the front: the result is [B, KV, ...].
+    rep_min = cache.rep_min.at[barange, :, slot].set(
         jnp.where(need_alloc[:, None, None], INF,
-                  cache.rep_min[barange, slot]))
-    rep_max = cache.rep_max.at[barange, slot].set(
+                  cache.rep_min[barange, :, slot]))
+    rep_max = cache.rep_max.at[barange, :, slot].set(
         jnp.where(need_alloc[:, None, None], -INF,
-                  cache.rep_max[barange, slot]))
+                  cache.rep_max[barange, :, slot]))
     priority = cache.priority.at[barange, slot].set(
         jnp.where(need_alloc, new_page_priority,
                   cache.priority[barange, slot]))
@@ -226,20 +259,20 @@ def append_token(cache: PagedCache, k_new: jnp.ndarray, v_new: jnp.ndarray,
                   cache.cur_len < pin_below_pos,
                   cache.pinned[barange, slot]))
     # zero the KV of a reset page so stale tokens can't leak through
-    k_pages = cache.k_pages.at[barange, slot].set(
+    k_pages = cache.k_pages.at[barange, :, slot].set(
         jnp.where(need_alloc[:, None, None, None], 0,
-                  cache.k_pages[barange, slot]))
-    v_pages = cache.v_pages.at[barange, slot].set(
+                  cache.k_pages[barange, :, slot]))
+    v_pages = cache.v_pages.at[barange, :, slot].set(
         jnp.where(need_alloc[:, None, None, None], 0,
-                  cache.v_pages[barange, slot]))
+                  cache.v_pages[barange, :, slot]))
 
     offset = jnp.where(need_alloc, 0, active_len)
-    k_pages = k_pages.at[barange, slot, offset].set(
+    k_pages = k_pages.at[barange, :, slot, offset].set(
         k_new.astype(k_pages.dtype))
-    v_pages = v_pages.at[barange, slot, offset].set(
+    v_pages = v_pages.at[barange, :, slot, offset].set(
         v_new.astype(v_pages.dtype))
-    rep_min = rep_min.at[barange, slot].min(k_new.astype(jnp.float32))
-    rep_max = rep_max.at[barange, slot].max(k_new.astype(jnp.float32))
+    rep_min = rep_min.at[barange, :, slot].min(k_new.astype(jnp.float32))
+    rep_max = rep_max.at[barange, :, slot].max(k_new.astype(jnp.float32))
     page_len = page_len.at[barange, slot].add(1)
 
     new_cache = cache._replace(

@@ -21,6 +21,8 @@ if TYPE_CHECKING:
 class H2OPolicy(SparsityPolicy):
     """O(L) memory; heavy-hitter accumulation + protected recent window."""
 
+    uses_page_probs = True
+
     def cache_slots(self, cfg: "RaasConfig", max_seq_len: int,
                     prefill_len: int = 0) -> int:
         return self.budget_slots(cfg, prefill_len)

@@ -15,8 +15,13 @@ PagedCache` substrate:
   ``cache_slots``       how many page slots the policy needs — this IS
                         the paper's O(L)-vs-O(N) memory axis, made
                         structural;
-  ``select_pages``      which pages this step's attention touches
-                        (Quest top-k; ``None`` = the whole live cache);
+  ``select_pages``      which pages this step's attention touches, as
+                        an i32 *index table* handed to the paged
+                        kernel (Quest top-k; ``None`` = the identity
+                        table = the whole live cache).  Selection is
+                        indices-only: the kernel resolves the table
+                        against the page-major cache in HBM, so a
+                        policy never causes a gathered KV copy;
   ``refresh_priority``  how eviction priority evolves (RaaS timestamps,
                         H2O accumulation, Streaming: frozen);
   ``new_page_priority`` priority stamped on a freshly allocated page;
@@ -73,6 +78,14 @@ class SparsityPolicy:
     #: registry id; set by :func:`register_policy`.
     name: str = "base"
 
+    #: whether ``refresh_priority`` consumes the true per-page
+    #: attention probabilities.  The kernel always produces them for
+    #: the pages it attends; this flag only controls whether the decode
+    #: step scatters them back to slot space when the policy *also*
+    #: selects a page subset (an O(S)-scalar fallback no built-in
+    #: policy needs — H2O consumes probs but never selects).
+    uses_page_probs: bool = False
+
     # -- capacity: the O(L) vs O(N) axis -----------------------------------
     def cache_slots(self, cfg: "RaasConfig", max_seq_len: int,
                     prefill_len: int = 0) -> int:
@@ -93,9 +106,12 @@ class SparsityPolicy:
     # -- selection: which pages this step's attention touches --------------
     def select_pages(self, cache: "PagedCache", scores: jnp.ndarray,
                      cfg: "RaasConfig") -> Optional[jnp.ndarray]:
-        """Gather indices [B, K] for top-k-style policies, or ``None``
-        to attend the whole live cache (for O(L) policies the live
-        cache *is* the retained set)."""
+        """Index table [B, K] of page slots for top-k-style policies,
+        or ``None`` for the identity table (attend the whole live
+        cache — for O(L) policies the live cache *is* the retained
+        set).  Entries must be duplicate-free valid slot indices;
+        empty pages (``page_len == 0``) are masked by the kernel, so
+        over-selection is harmless."""
         return None
 
     # -- eviction-priority dynamics ----------------------------------------

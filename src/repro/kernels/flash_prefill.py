@@ -73,12 +73,13 @@ def _kernel(scale: float, q_offset: int, kv_len: int, bQ: int, bK: int,
                                              "interpret"))
 def flash_prefill_pallas(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
                          scale: float, q_offset: int = 0, kv_len: int = 0,
-                         block_q: int = 256, block_k: int = 256,
-                         interpret: bool = True) -> jnp.ndarray:
+                         block_q: int = 256, block_k: int = 256, *,
+                         interpret: bool) -> jnp.ndarray:
     """q [B,H,Sq,hd]; k/v [B,KV,Skv,hd] (padded to block multiples).
 
     ``kv_len``: true kv length (<= Skv); padding keys are masked.
-    Returns ctx [B, H, Sq, hd].
+    ``interpret`` is mandatory: only ``ops.py`` decides the execution
+    mode.  Returns ctx [B, H, Sq, hd].
     """
     B, H, Sq, hd = q.shape
     KV, Skv = k.shape[1], k.shape[2]
@@ -107,7 +108,7 @@ def flash_prefill_pallas(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
             pltpu.VMEM((bQ, hd), jnp.float32),
         ],
         out_shape=jax.ShapeDtypeStruct((B, H, Sq, hd), q.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=pltpu.TPUCompilerParams(
             dimension_semantics=("parallel", "parallel", "parallel",
                                  "arbitrary")),
         interpret=interpret,

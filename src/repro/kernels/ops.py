@@ -7,12 +7,32 @@ Every op takes ``impl``:
   "pallas_interpret"  — Pallas kernel, interpret mode (CPU-validated),
   "pallas"            — Pallas kernel compiled for TPU (the target).
 
-The Pallas wrappers handle layout (page-major transposes), padding to
-block multiples, and the online-softmax page-probability fixup.
+DESIGN — the index-table contract
+=================================
+Decode attention consumes the cache **in place**, in its page-major
+storage layout ``[B, KV, S, P, hd]``.  Page selection is an i32 index
+table ``sel_idx [B, nSel]`` (``None`` = identity: attend every slot):
+
+  * entries are duplicate-free page slots; order is irrelevant
+    (softmax runs over the union of their tokens);
+  * raggedness is expressed per page through ``page_len`` — live
+    tokens are a prefix of each page, so one i32 per page replaces a
+    per-token mask;
+  * the Pallas path hands the table to the kernel via scalar prefetch
+    and the kernel's BlockSpec ``index_map`` resolves each page
+    directly in HBM — selection costs O(nSel) i32, not O(nSel*P*hd)
+    gathered KV bytes, and the identity path costs nothing at all;
+  * the jnp oracle gathers the selected pages (a copy is inherent to
+    jnp) but the copy is O(nSel), and the identity path uses the cache
+    arrays directly with no copy.
+
+The raw Pallas entry points require ``interpret`` explicitly; this
+module is the only place that maps ``impl`` to an execution mode, so a
+direct kernel call can never silently run interpreted.
 """
 from __future__ import annotations
 
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -30,54 +50,59 @@ def _round_up(x: int, m: int) -> int:
 # Paged decode attention
 # ---------------------------------------------------------------------------
 def paged_decode_attention(q: jnp.ndarray, k_pages: jnp.ndarray,
-                           v_pages: jnp.ndarray, token_mask: jnp.ndarray,
-                           scale: float, impl: str = "jnp",
-                           block_tokens: int = 512
+                           v_pages: jnp.ndarray, page_len: jnp.ndarray,
+                           sel_idx: Optional[jnp.ndarray], scale: float,
+                           impl: str = "jnp"
                            ) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """q [B,H,hd]; k/v_pages [B,S,P,KV,hd]; token_mask [B,S,P] bool.
+    """q [B,H,hd]; k/v_pages [B,KV,S,P,hd] (page-major cache storage);
+    page_len [B,S] i32; sel_idx [B,nSel] i32 page table or None for the
+    identity table.
 
-    Returns (ctx [B,H,hd], page_probs [B,S] — true probability mass per
-    page summed over heads).
+    Returns (ctx [B,H,hd], page_probs [B,nSel] — true probability mass
+    per *selected* page summed over heads; slot space [B,S] when
+    sel_idx is None).
     """
     if impl == "jnp":
         return ref.paged_decode_attention_ref(q, k_pages, v_pages,
-                                              token_mask, scale)
+                                              page_len, sel_idx, scale)
     from repro.kernels.paged_attention import paged_decode_attention_pallas
 
     B, H, hd = q.shape
-    S, P, KV = k_pages.shape[1:4]
+    KV, S = k_pages.shape[1:3]
     G = H // KV
     qg = q.reshape(B, KV, G, hd)
-    # page-major token layout [B, KV, T, hd]
-    kt = k_pages.reshape(B, S * P, KV, hd).transpose(0, 2, 1, 3)
-    vt = v_pages.reshape(B, S * P, KV, hd).transpose(0, 2, 1, 3)
-    mask = token_mask.reshape(B, S * P).astype(jnp.float32)
-
-    T = S * P
-    bT = min(block_tokens, _round_up(T, P))
-    bT = max(P, (bT // P) * P)
-    Tp = _round_up(T, bT)
-    if Tp != T:
-        pad = Tp - T
-        kt = jnp.pad(kt, ((0, 0), (0, 0), (0, pad), (0, 0)))
-        vt = jnp.pad(vt, ((0, 0), (0, 0), (0, pad), (0, 0)))
-        mask = jnp.pad(mask, ((0, 0), (0, pad)))
-
-    ctx, psums, bmax, ml = paged_decode_attention_pallas(
-        qg, kt, vt, mask, scale=scale, page_size=P, block_tokens=bT,
+    if sel_idx is None:
+        sel_idx = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+        sel_len = page_len.astype(jnp.int32)
+    else:
+        sel_idx = sel_idx.astype(jnp.int32)
+        sel_len = jnp.take_along_axis(page_len, sel_idx, axis=1) \
+            .astype(jnp.int32)
+    ctx, page_probs = paged_decode_attention_pallas(
+        sel_idx, sel_len, qg, k_pages, v_pages, scale=scale,
         interpret=(impl == "pallas_interpret"))
-
-    # fixup: true page probs = psum * exp(m_block - m_final) / l_final
-    nT = bmax.shape[-1]
-    Sp = Tp // P
-    pages_per_block = bT // P
-    m_final = ml[..., 0:1]                                  # [B,KV,G,1]
-    l_final = jnp.maximum(ml[..., 1:2], 1e-30)
-    corr = jnp.exp(bmax - m_final)                          # [B,KV,G,nT]
-    corr_pages = jnp.repeat(corr, pages_per_block, axis=-1)  # [B,KV,G,Sp]
-    probs_g = psums * corr_pages / l_final                  # [B,KV,G,Sp]
-    page_probs = probs_g.sum(axis=(1, 2))[:, :S]            # [B,S]
     return ctx.reshape(B, H, hd), page_probs
+
+
+def paged_decode_attention_cost(B: int, KV: int, G: int, hd: int, P: int,
+                                n_sel: int, kv_itemsize: int = 4) -> dict:
+    """Exact per-call HBM traffic / FLOPs of the index-mapped kernel.
+
+    Deterministic from the grid x block specs: each of the B*KV*n_sel
+    grid steps DMAs one K page and one V page of [P, hd]; q and ctx are
+    resident per (b, kv); the page-prob output is n_sel f32 per batch
+    row.  This is the number the benchmarks report as "attention bytes
+    accessed" — it is O(n_sel), independent of the slot count S — and
+    the single source of the kernel's own ``pl.CostEstimate``.
+    """
+    kv_bytes = 2 * B * KV * n_sel * P * hd * kv_itemsize
+    qo_bytes = 2 * B * KV * G * hd * kv_itemsize
+    probs_bytes = B * n_sel * 4
+    table_bytes = 2 * B * n_sel * 4
+    return {
+        "flops": 4 * B * KV * G * n_sel * P * hd,
+        "bytes_accessed": kv_bytes + qo_bytes + probs_bytes + table_bytes,
+    }
 
 
 # ---------------------------------------------------------------------------
@@ -86,7 +111,8 @@ def paged_decode_attention(q: jnp.ndarray, k_pages: jnp.ndarray,
 def page_score(q: jnp.ndarray, rep_min: jnp.ndarray, rep_max: jnp.ndarray,
                page_mask: jnp.ndarray, scale: float, impl: str = "jnp",
                block_pages: int = 256) -> jnp.ndarray:
-    """q [B,H,hd]; rep_min/max [B,S,KV,hd]; page_mask [B,S] bool.
+    """q [B,H,hd]; rep_min/max [B,KV,S,hd] (page-major); page_mask
+    [B,S] bool.
 
     Returns scores [B,S] f32 (-inf at invalid pages).
     """
@@ -95,7 +121,7 @@ def page_score(q: jnp.ndarray, rep_min: jnp.ndarray, rep_max: jnp.ndarray,
     from repro.kernels.page_score import page_score_pallas
 
     B, H, hd = q.shape
-    S, KV = rep_min.shape[1:3]
+    KV, S = rep_min.shape[1:3]
     G = H // KV
     qg = q.reshape(B, KV, G, hd)
     bS = min(block_pages, S)
@@ -103,8 +129,8 @@ def page_score(q: jnp.ndarray, rep_min: jnp.ndarray, rep_max: jnp.ndarray,
     rmin, rmax, mask = rep_min, rep_max, page_mask.astype(jnp.float32)
     if Sp != S:
         pad = Sp - S
-        rmin = jnp.pad(rmin, ((0, 0), (0, pad), (0, 0), (0, 0)))
-        rmax = jnp.pad(rmax, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        rmin = jnp.pad(rmin, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        rmax = jnp.pad(rmax, ((0, 0), (0, 0), (0, pad), (0, 0)))
         mask = jnp.pad(mask, ((0, 0), (0, pad)))
     out = page_score_pallas(qg, rmin, rmax, mask, scale=scale,
                             block_pages=bS,

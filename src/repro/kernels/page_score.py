@@ -8,8 +8,13 @@ timestamp refresh / Quest top-k selection.
 score[s] = max_{kv,g}  sum_d  max(q[kv,g,d]*rep_min[s,kv,d],
                                   q[kv,g,d]*rep_max[s,kv,d]) * scale
 
+The representatives are stored page-major per kv head
+(``[B, KV, S, hd]`` — the cache's kernel-native layout), so the page
+block axis is a plain slice of dim 2 and the kernel contains no
+transposes at all.
+
 Grid (B, nS): page-block axis is parallel (no accumulation across
-blocks).  VMEM per step: 2*bS*KV*hd f32 rep blocks + KV*G*hd query —
+blocks).  VMEM per step: 2*KV*bS*hd f32 rep blocks + KV*G*hd query —
 with bS=256, KV=8, hd=128 that's ~2 MiB.
 """
 from __future__ import annotations
@@ -26,15 +31,12 @@ NEG_INF = -1e30
 
 def _kernel(scale: float, q_ref, rmin_ref, rmax_ref, valid_ref, out_ref):
     q = q_ref[0].astype(jnp.float32)               # [KV, G, hd]
-    rmin = rmin_ref[0].astype(jnp.float32)         # [bS, KV, hd]
+    rmin = rmin_ref[0].astype(jnp.float32)         # [KV, bS, hd]
     rmax = rmax_ref[0].astype(jnp.float32)
     valid = valid_ref[0] > 0.5                     # [bS]
 
-    # [KV, G, 1, hd] x [1, 1, bS(via move), hd]
     qe = q[:, :, None, :]                                   # [KV,G,1,hd]
-    rmin_t = jnp.transpose(rmin, (1, 0, 2))[:, None]        # [KV,1,bS,hd]
-    rmax_t = jnp.transpose(rmax, (1, 0, 2))[:, None]
-    elem = jnp.maximum(qe * rmin_t, qe * rmax_t)            # [KV,G,bS,hd]
+    elem = jnp.maximum(qe * rmin[:, None], qe * rmax[:, None])  # [KV,G,bS,hd]
     u = elem.sum(axis=-1) * scale                           # [KV,G,bS]
     score = u.max(axis=(0, 1))                              # [bS]
     out_ref[0] = jnp.where(valid, score, NEG_INF)
@@ -44,14 +46,15 @@ def _kernel(scale: float, q_ref, rmin_ref, rmax_ref, valid_ref, out_ref):
                                              "interpret"))
 def page_score_pallas(qg: jnp.ndarray, rep_min: jnp.ndarray,
                       rep_max: jnp.ndarray, valid: jnp.ndarray,
-                      scale: float, block_pages: int = 256,
-                      interpret: bool = True) -> jnp.ndarray:
-    """qg [B,KV,G,hd]; rep_min/max [B,S,KV,hd]; valid [B,S] f32 0/1.
+                      scale: float, block_pages: int, *,
+                      interpret: bool) -> jnp.ndarray:
+    """qg [B,KV,G,hd]; rep_min/max [B,KV,S,hd]; valid [B,S] f32 0/1.
 
-    Returns scores [B, S] f32 (-inf at invalid pages).
+    ``interpret`` is mandatory: only ``ops.py`` decides the execution
+    mode.  Returns scores [B, S] f32 (-inf at invalid pages).
     """
     B, KV, G, hd = qg.shape
-    S = rep_min.shape[1]
+    S = rep_min.shape[2]
     bS = min(block_pages, S)
     assert S % bS == 0
     nS = S // bS
@@ -61,13 +64,13 @@ def page_score_pallas(qg: jnp.ndarray, rep_min: jnp.ndarray,
         grid=(B, nS),
         in_specs=[
             pl.BlockSpec((1, KV, G, hd), lambda b, s: (b, 0, 0, 0)),
-            pl.BlockSpec((1, bS, KV, hd), lambda b, s: (b, s, 0, 0)),
-            pl.BlockSpec((1, bS, KV, hd), lambda b, s: (b, s, 0, 0)),
+            pl.BlockSpec((1, KV, bS, hd), lambda b, s: (b, 0, s, 0)),
+            pl.BlockSpec((1, KV, bS, hd), lambda b, s: (b, 0, s, 0)),
             pl.BlockSpec((1, bS), lambda b, s: (b, s)),
         ],
         out_specs=pl.BlockSpec((1, bS), lambda b, s: (b, s)),
         out_shape=jax.ShapeDtypeStruct((B, S), jnp.float32),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=pltpu.TPUCompilerParams(
             dimension_semantics=("parallel", "parallel")),
         interpret=interpret,
         name="raas_page_score",

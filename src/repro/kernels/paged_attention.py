@@ -1,28 +1,37 @@
-"""Pallas TPU kernel: single-token paged decode attention (RaaS hot loop).
+"""Pallas TPU kernel: zero-copy index-mapped paged decode attention.
 
-TPU-native adaptation of the paper's sparse decode step (DESIGN.md §2):
-instead of a CUDA gather + FlashInfer call, we stream page blocks
-HBM->VMEM along a sequential grid axis and accumulate with an online
-softmax in f32 VMEM scratch.  The kernel additionally emits the
-*true* per-page probability mass (needed by the H2O baseline and the
-paper's Fig-6 fidelity metrics) at negligible cost: per-block
-unnormalised exp-sums plus the running row max, fixed up by the ops.py
-wrapper after the final block.
+The RaaS hot loop (DESIGN §2), TPU-native: instead of a CUDA gather +
+FlashInfer call — or the dense-kernel-with-a-mask this repo used to
+ship, which re-copied the whole cache into a token-major layout every
+layer every step — the kernel streams **selected pages only**, straight
+out of the page-major HBM cache, vLLM-page-table style:
 
-Layout (pre-arranged by ops.py):
-  qg    [B, KV, G, hd]      G = H // KV query heads per kv head
-  kt    [B, KV, T, hd]      T = S * P tokens, page-major
-  vt    [B, KV, T, hd]
-  mask  [B, T]   f32 0/1
+  * ``sel_idx [B, nSel]`` (scalar-prefetched, SMEM) is the per-sequence
+    page table for this step: the i32 slots the policy selected.  The
+    K/V BlockSpec ``index_map`` reads it to resolve the HBM block for
+    grid step ``(b, kv, s)`` — page gathering is pure DMA indexing, no
+    KV byte is ever copied outside the ``pallas_call``.
+  * ``sel_len [B, nSel]`` masks the live prefix of each page, so ragged
+    partial pages need no per-token mask array.
+  * Quest hands over its top-k table; dense/RaaS/H2O/streaming pass the
+    identity table (``ops.py`` builds it).  Either way HBM traffic is
+    O(nSel * P), never O(S * P).
 
-Grid (B, KV, nT): first two axes parallel, last sequential (online
-softmax accumulation across token blocks).
+Grid ``(B, KV, nSel)``: batch parallel; kv-head and page axes
+sequential (online-softmax accumulation across pages, page-probability
+accumulation across kv heads).  Per grid step the kernel DMAs exactly
+one K page and one V page ``[P, hd]`` — the whole working set is
+2*P*hd*(kv bytes) + G*hd f32 accumulators + G*nSel f32 page sums, a few
+tens of KiB against the ~16 MiB VMEM budget, leaving the pipeliner room
+to double-buffer the page stream.
 
-Block shapes: token block bT (multiple of page_size P; default 512 =
-32 pages) x full head dim.  VMEM working set per step:
-2*bT*hd*(kv bytes) + G*hd acc + G*bT probs — e.g. bT=512, hd=128, bf16:
-~290 KiB, comfortably inside the ~16 MiB VMEM budget, leaving room for
-double buffering of the K/V streams.
+The per-page *true* probability mass (H2O's signal, the paper's Fig-6
+fidelity metric) is finalized **in-kernel**: per-page unnormalised
+exp-sums are kept in VMEM scratch under the running max (rescaled by
+the online-softmax correction each step) and normalised + summed over
+kv heads into the ``page_probs [B, nSel]`` output on the last page of
+each kv-head sweep.  No wrapper fix-up pass, no scatter back to slot
+space for selecting policies.
 """
 from __future__ import annotations
 
@@ -33,109 +42,142 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
+from repro.kernels.ops import paged_decode_attention_cost
+
 NEG_INF = -1e30
 
 
-def _kernel(page_size: int, scale: float,
-            q_ref, k_ref, v_ref, mask_ref,
-            ctx_ref, psum_ref, bmax_ref, ml_ref,
-            m_s, l_s, acc_s):
-    t = pl.program_id(2)
-    nT = pl.num_programs(2)
+def _kernel(scale: float,
+            sel_ref, len_ref,                     # scalar-prefetch (SMEM)
+            q_ref, k_ref, v_ref,                  # VMEM blocks
+            ctx_ref, probs_ref,                   # outputs
+            m_s, l_s, acc_s, psum_s):             # VMEM scratch
+    b = pl.program_id(0)
+    kv = pl.program_id(1)
+    s = pl.program_id(2)
+    n_sel = pl.num_programs(2)
 
-    @pl.when(t == 0)
+    @pl.when(s == 0)
     def _init():
         m_s[...] = jnp.full_like(m_s, NEG_INF)
         l_s[...] = jnp.zeros_like(l_s)
         acc_s[...] = jnp.zeros_like(acc_s)
+        psum_s[...] = jnp.zeros_like(psum_s)
 
     q = q_ref[0, 0].astype(jnp.float32)            # [G, hd]
-    k = k_ref[0, 0].astype(jnp.float32)            # [bT, hd]
-    v = v_ref[0, 0].astype(jnp.float32)            # [bT, hd]
-    mask = mask_ref[0] > 0.5                       # [bT]
+    k = k_ref[0, 0, 0].astype(jnp.float32)         # [P, hd]  (one page)
+    v = v_ref[0, 0, 0].astype(jnp.float32)         # [P, hd]
+    P = k.shape[0]
+    n_live = len_ref[b, s]
+    mask = jax.lax.broadcasted_iota(jnp.int32, (1, P), 1) < n_live  # [1, P]
 
     logits = jax.lax.dot_general(
         q, k, (((1,), (1,)), ((), ())),
-        preferred_element_type=jnp.float32) * scale          # [G, bT]
-    logits = jnp.where(mask[None, :], logits, NEG_INF)
+        preferred_element_type=jnp.float32) * scale          # [G, P]
+    logits = jnp.where(mask, logits, NEG_INF)
 
     m_prev = m_s[...]                              # [G]
     m_new = jnp.maximum(m_prev, logits.max(axis=-1))
     corr = jnp.exp(m_prev - m_new)
-    p = jnp.where(mask[None, :], jnp.exp(logits - m_new[:, None]), 0.0)
+    p = jnp.where(mask, jnp.exp(logits - m_new[:, None]), 0.0)
 
     l_s[...] = l_s[...] * corr + p.sum(axis=-1)
     acc_s[...] = acc_s[...] * corr[:, None] + jax.lax.dot_general(
         p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
     m_s[...] = m_new
 
-    # per-page unnormalised exp sums under this block's running max
-    bT = p.shape[-1]
-    psum_ref[0, 0] = p.reshape(p.shape[0], bT // page_size,
-                               page_size).sum(axis=-1)        # [G, pages]
-    bmax_ref[0, 0, :, 0] = m_new
+    # per-page unnormalised exp sums, kept consistent with the running
+    # max: rescale history by corr, deposit this page's sum at column s.
+    G = p.shape[0]
+    col = jax.lax.broadcasted_iota(jnp.int32, (G, psum_s.shape[1]), 1)
+    psum_s[...] = psum_s[...] * corr[:, None] + jnp.where(
+        col == s, p.sum(axis=-1)[:, None], 0.0)
 
-    @pl.when(t == nT - 1)
+    @pl.when(s == n_sel - 1)
     def _fin():
         denom = jnp.maximum(l_s[...], 1e-30)
         ctx_ref[0, 0] = (acc_s[...] / denom[:, None]).astype(ctx_ref.dtype)
-        ml_ref[0, 0, :, 0] = m_s[...]
-        ml_ref[0, 0, :, 1] = l_s[...]
+        # true page probabilities for this kv head, summed over its
+        # query group; accumulated over kv heads in the revisited block.
+        contrib = (psum_s[...] / denom[:, None]).sum(axis=0)   # [nSel]
+
+        @pl.when(kv == 0)
+        def _set():
+            probs_ref[0] = contrib
+
+        @pl.when(kv > 0)
+        def _add():
+            probs_ref[0] = probs_ref[0] + contrib
 
 
-@functools.partial(jax.jit, static_argnames=("scale", "page_size",
-                                             "block_tokens", "interpret"))
-def paged_decode_attention_pallas(qg: jnp.ndarray, kt: jnp.ndarray,
-                                  vt: jnp.ndarray, mask: jnp.ndarray,
-                                  scale: float, page_size: int,
-                                  block_tokens: int = 512,
-                                  interpret: bool = True):
+@functools.partial(jax.jit, static_argnames=("scale", "interpret"))
+def paged_decode_attention_pallas(sel_idx: jnp.ndarray, sel_len: jnp.ndarray,
+                                  qg: jnp.ndarray, k_pages: jnp.ndarray,
+                                  v_pages: jnp.ndarray, *, scale: float,
+                                  interpret: bool):
     """Raw kernel entry.  See ops.paged_decode_attention for the public API.
 
-    Returns (ctx [B,KV,G,hd], psums [B,KV,G,S], bmax [B,KV,G,nT],
-    ml [B,KV,G,2]) — psums/bmax/ml are the online-softmax bookkeeping
-    the wrapper uses to reconstruct true page probabilities.
+    sel_idx   [B, nSel] i32  page slots to stream (duplicate-free; every
+                             entry must be a valid slot index — pad with
+                             any live slot and sel_len 0)
+    sel_len   [B, nSel] i32  live tokens per selected page (0..P)
+    qg        [B, KV, G, hd]
+    k_pages   [B, KV, S, P, hd]  page-major cache storage (read in place)
+    v_pages   [B, KV, S, P, hd]
+
+    ``interpret`` is mandatory: only ``ops.py`` decides the execution
+    mode, so a direct call can never silently fall back to the
+    interpreter.
+
+    Returns (ctx [B, KV, G, hd], page_probs [B, nSel] f32) — the probs
+    are true post-softmax per-page mass summed over all query heads.
     """
     B, KV, G, hd = qg.shape
-    T = kt.shape[2]
-    bT = min(block_tokens, T)
-    assert T % bT == 0 and bT % page_size == 0
-    nT = T // bT
-    S = T // page_size
-    pages_per_block = bT // page_size
+    P = k_pages.shape[3]
+    n_sel = sel_idx.shape[1]
 
-    grid = (B, KV, nT)
-    kernel = functools.partial(_kernel, page_size, scale)
-    out_shape = (
-        jax.ShapeDtypeStruct((B, KV, G, hd), qg.dtype),
-        jax.ShapeDtypeStruct((B, KV, G, S), jnp.float32),
-        jax.ShapeDtypeStruct((B, KV, G, nT), jnp.float32),
-        jax.ShapeDtypeStruct((B, KV, G, 2), jnp.float32),
-    )
-    return pl.pallas_call(
-        kernel,
-        grid=grid,
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, KV, n_sel),
         in_specs=[
-            pl.BlockSpec((1, 1, G, hd), lambda b, k, t: (b, k, 0, 0)),
-            pl.BlockSpec((1, 1, bT, hd), lambda b, k, t: (b, k, t, 0)),
-            pl.BlockSpec((1, 1, bT, hd), lambda b, k, t: (b, k, t, 0)),
-            pl.BlockSpec((1, bT), lambda b, k, t: (b, t)),
+            pl.BlockSpec((1, 1, G, hd),
+                         lambda b, k, s, sel, ln: (b, k, 0, 0)),
+            pl.BlockSpec((1, 1, 1, P, hd),
+                         lambda b, k, s, sel, ln: (b, k, sel[b, s], 0, 0)),
+            pl.BlockSpec((1, 1, 1, P, hd),
+                         lambda b, k, s, sel, ln: (b, k, sel[b, s], 0, 0)),
         ],
         out_specs=(
-            pl.BlockSpec((1, 1, G, hd), lambda b, k, t: (b, k, 0, 0)),
-            pl.BlockSpec((1, 1, G, pages_per_block),
-                         lambda b, k, t: (b, k, 0, t)),
-            pl.BlockSpec((1, 1, G, 1), lambda b, k, t: (b, k, 0, t)),
-            pl.BlockSpec((1, 1, G, 2), lambda b, k, t: (b, k, 0, 0)),
+            pl.BlockSpec((1, 1, G, hd), lambda b, k, s, sel, ln: (b, k, 0, 0)),
+            pl.BlockSpec((1, n_sel), lambda b, k, s, sel, ln: (b, 0)),
         ),
         scratch_shapes=[
             pltpu.VMEM((G,), jnp.float32),
             pltpu.VMEM((G,), jnp.float32),
             pltpu.VMEM((G, hd), jnp.float32),
+            pltpu.VMEM((G, n_sel), jnp.float32),
         ],
-        out_shape=out_shape,
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=("parallel", "parallel", "arbitrary")),
+    )
+    # single source of truth for the kernel's traffic/FLOPs: the same
+    # formula the benchmarks report as attention bytes accessed.
+    c = paged_decode_attention_cost(
+        B=B, KV=KV, G=G, hd=hd, P=P, n_sel=n_sel,
+        kv_itemsize=jnp.dtype(k_pages.dtype).itemsize)
+    cost = pl.CostEstimate(
+        flops=c["flops"],
+        bytes_accessed=c["bytes_accessed"],
+        transcendentals=B * KV * G * n_sel * P,
+    )
+    return pl.pallas_call(
+        functools.partial(_kernel, scale),
+        grid_spec=grid_spec,
+        out_shape=(
+            jax.ShapeDtypeStruct((B, KV, G, hd), qg.dtype),
+            jax.ShapeDtypeStruct((B, n_sel), jnp.float32),
+        ),
+        compiler_params=pltpu.TPUCompilerParams(
+            dimension_semantics=("parallel", "arbitrary", "arbitrary")),
+        cost_estimate=cost,
         interpret=interpret,
         name="raas_paged_decode_attention",
-    )(qg, kt, vt, mask)
+    )(sel_idx, sel_len, qg, k_pages, v_pages)

@@ -5,18 +5,29 @@ allclose to the function of the same name here for every shape/dtype in
 the test sweep.  They are also the CPU fast path used by the rest of
 the framework (``impl='jnp'``).
 
-Shapes (decode):
+Shapes (decode) — kernel-native page-major layout:
   q          [B, H, hd]           one new query token per sequence
-  k_pages    [B, S, P, KV, hd]    S slots of P tokens each
-  v_pages    [B, S, P, KV, hd]
-  token_mask [B, S, P]  bool      which cached token positions are live
-  rep_min    [B, S, KV, hd]       channelwise min of keys in the page
-  rep_max    [B, S, KV, hd]
+  k_pages    [B, KV, S, P, hd]    S slots of P tokens per kv head
+  v_pages    [B, KV, S, P, hd]
+  page_len   [B, S]  i32          live tokens per page (prefix contract)
+  sel_idx    [B, nSel] i32        page slots this step attends, or None
+                                  for the identity table (all slots)
+  rep_min    [B, KV, S, hd]       channelwise min of keys in the page
+  rep_max    [B, KV, S, hd]
+
+The index-table contract: ``sel_idx`` entries are duplicate-free page
+slots (order irrelevant — softmax is over the union of their tokens);
+pages with ``page_len == 0`` contribute nothing.  The oracle gathers
+the selected pages (it is jnp — a copy is unavoidable here, but it is
+O(nSel), never O(S)); the Pallas kernel resolves the same indices
+in-kernel with zero copies.
 
 GQA: H query heads map onto KV kv-heads in contiguous groups of
 G = H // KV.
 """
 from __future__ import annotations
+
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -25,30 +36,47 @@ _NEG_INF = -1e30
 
 
 def paged_decode_attention_ref(q: jnp.ndarray, k_pages: jnp.ndarray,
-                               v_pages: jnp.ndarray, token_mask: jnp.ndarray,
-                               scale: float):
-    """Single-token paged attention.
+                               v_pages: jnp.ndarray, page_len: jnp.ndarray,
+                               sel_idx: Optional[jnp.ndarray],
+                               scale: float
+                               ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Single-token paged attention over the selected pages.
 
-    Returns ``(ctx [B, H, hd], page_probs [B, S])`` where ``page_probs``
-    is the true post-softmax probability mass per page, summed over all
-    query heads (consumed by the H2O policy).
+    Returns ``(ctx [B, H, hd], page_probs [B, nSel])`` where
+    ``page_probs`` is the true post-softmax probability mass per
+    *selected* page, summed over all query heads (consumed by the H2O
+    policy).  With ``sel_idx=None`` the full slot range is attended and
+    ``page_probs`` is in slot space ``[B, S]``.
     """
     B, H, hd = q.shape
-    S, P, KV = k_pages.shape[1:4]
+    KV, S, P = k_pages.shape[1:4]
     G = H // KV
     qg = q.reshape(B, KV, G, hd).astype(jnp.float32)
-    k = k_pages.astype(jnp.float32)
-    v = v_pages.astype(jnp.float32)
-    logits = jnp.einsum("bkgd,bspkd->bkgsp", qg, k) * scale
-    mask = token_mask[:, None, None, :, :]
-    logits = jnp.where(mask, logits, _NEG_INF)
-    flat = logits.reshape(B, KV, G, S * P)
+    if sel_idx is None:
+        k = k_pages.astype(jnp.float32)                  # [B,KV,S,P,hd]
+        v = v_pages.astype(jnp.float32)
+        sel_len = page_len                               # [B,S]
+    else:
+        barange = jnp.arange(B)[:, None]
+        # mixed indexing moves the advanced axes to the front:
+        # [B, nSel, KV, P, hd] -> kv-major [B, KV, nSel, P, hd]
+        k = k_pages[barange, :, sel_idx].transpose(0, 2, 1, 3, 4) \
+            .astype(jnp.float32)
+        v = v_pages[barange, :, sel_idx].transpose(0, 2, 1, 3, 4) \
+            .astype(jnp.float32)
+        sel_len = jnp.take_along_axis(page_len, sel_idx, axis=1)
+    n_sel = k.shape[2]
+    mask = jnp.arange(P)[None, None] < sel_len[:, :, None]   # [B,nSel,P]
+
+    logits = jnp.einsum("bkgd,bkspd->bkgsp", qg, k) * scale
+    logits = jnp.where(mask[:, None, None], logits, _NEG_INF)
+    flat = logits.reshape(B, KV, G, n_sel * P)
     m = jnp.max(flat, axis=-1, keepdims=True)
     e = jnp.exp(flat - m)
     e = jnp.where(flat <= _NEG_INF / 2, 0.0, e)
     denom = jnp.sum(e, axis=-1, keepdims=True)
-    probs = (e / jnp.maximum(denom, 1e-30)).reshape(B, KV, G, S, P)
-    ctx = jnp.einsum("bkgsp,bspkd->bkgd", probs, v)
+    probs = (e / jnp.maximum(denom, 1e-30)).reshape(B, KV, G, n_sel, P)
+    ctx = jnp.einsum("bkgsp,bkspd->bkgd", probs, v)
     page_probs = probs.sum(axis=(1, 2, 4))  # sum over kv-heads, groups, in-page
     return ctx.reshape(B, H, hd).astype(q.dtype), page_probs
 
@@ -60,17 +88,19 @@ def page_score_ref(q: jnp.ndarray, rep_min: jnp.ndarray, rep_max: jnp.ndarray,
     Per query head h and page s:  u_hs = sum_d max(q_d*min_d, q_d*max_d)
     (an upper bound on any in-page token's logit).  The per-page score
     is the max over all query heads, scaled like a logit.  Invalid pages
-    get -inf.  Returns [B, S] f32.
+    get -inf.  rep_min/rep_max are page-major ``[B, KV, S, hd]`` — the
+    layout already matches the contraction, no transpose required.
+    Returns [B, S] f32.
     """
     B, H, hd = q.shape
-    S, KV = rep_min.shape[1:3]
+    KV, S = rep_min.shape[1:3]
     G = H // KV
     qg = q.reshape(B, KV, G, hd).astype(jnp.float32)
     # the bound takes the elementwise max *before* the channel sum
     qe = qg[:, :, :, None, :]                                   # [B,KV,G,1,hd]
-    rmin = rep_min.astype(jnp.float32).transpose(0, 2, 1, 3)    # [B,KV,S,hd]
-    rmax = rep_max.astype(jnp.float32).transpose(0, 2, 1, 3)
-    elem = jnp.maximum(qe * rmin[:, :, None], qe * rmax[:, :, None])
+    rmin = rep_min.astype(jnp.float32)[:, :, None]              # [B,KV,1,S,hd]
+    rmax = rep_max.astype(jnp.float32)[:, :, None]
+    elem = jnp.maximum(qe * rmin, qe * rmax)
     u = elem.sum(-1) * scale                                    # [B,KV,G,S]
     score = u.max(axis=(1, 2))                                  # [B,S]
     return jnp.where(page_mask, score, _NEG_INF)

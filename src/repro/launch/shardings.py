@@ -148,8 +148,9 @@ def cache_pspec(path: str, shape: Tuple[int, ...], batch: int,
     """Paged-cache and mamba-state leaves.
 
     Leaves carry a leading [n_periods] stack dim, then batch.  KV pages
-    [.., B, S, P, KV, hd] shard batch over data axes and hd over model;
-    mamba ssm [.., B, H, P, N] shards heads over model.
+    [.., B, KV, S, P, hd] (page-major kernel-native layout) shard batch
+    over data axes and hd over model; mamba ssm [.., B, H, P, N] shards
+    heads over model.
     """
     name = path.split("/")[-1]
     bsz = 1

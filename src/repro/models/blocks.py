@@ -84,7 +84,14 @@ def block_train(params: dict, cfg: ModelConfig, h: jnp.ndarray,
 # Serving: prefill + decode
 # ---------------------------------------------------------------------------
 class BlockCache(NamedTuple):
-    """Per-block serving state; exactly one field is meaningful."""
+    """Per-block serving state; exactly one field is meaningful.
+
+    ``attn`` is the page-major :class:`~repro.core.paged_cache.
+    PagedCache` (``k_pages [B, KV, S, P, hd]``) — the kernel-native
+    layout that ``core.attention.decode_attend`` consumes in place.
+    Prefill ingest performs the only layout transpose; every decode
+    step reads/writes single pages of it.
+    """
 
     attn: Optional[pc.PagedCache]
     mamba: Optional[mamba2.MambaState]

@@ -16,6 +16,10 @@ Design:
     ``chunk_steps`` tokens — greedy sampling, EOS / length stopping and
     position bookkeeping all happen on device, and the host only syncs
     at chunk boundaries (where the scheduler admits / frees lanes).
+  * Lane KV lives in the page-major kernel-native cache layout
+    (``[B, KV, S, P, hd]``); splicing a prefilled row into a lane and
+    every decode step are in-place page writes — the engine never
+    re-lays-out KV bytes.
   * All policy semantics dispatch through the resolved
     :class:`SparsityPolicy` object; the engine knows no policy names.
 

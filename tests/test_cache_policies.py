@@ -76,10 +76,10 @@ def test_ingest_prefill_ragged():
     assert bool(cache.pinned[1, :2].all()) and not bool(cache.pinned[1, 2])
     np.testing.assert_array_equal(np.asarray(cache.tokens_cached()),
                                   [10, 5])
-    # rep keys of page 0 match min/max of its 4 keys
-    np.testing.assert_allclose(cache.rep_min[0, 0],
+    # rep keys of page 0 match min/max of its 4 keys ([B, KV, S, hd])
+    np.testing.assert_allclose(cache.rep_min[0, :, 0],
                                np.asarray(k[0, :4].min(0)), rtol=1e-6)
-    np.testing.assert_allclose(cache.rep_max[0, 0],
+    np.testing.assert_allclose(cache.rep_max[0, :, 0],
                                np.asarray(k[0, :4].max(0)), rtol=1e-6)
 
 
@@ -183,7 +183,7 @@ def test_policy_invariants(policy, budget_pages, prefill_len, n_decode,
                                           has_prefill=prefill_len > 0)
         # -- invariant: O(L) capacity ----------------------------------
         assert int(cache.tokens_cached()[0]) <= spec.capacity_tokens
-        assert cache.k_pages.shape[1] == n_slots  # static O(L) memory
+        assert cache.n_slots == n_slots  # static O(L) memory
         # -- invariant: pinned prefill intact --------------------------
         if prefill_len:
             assert bool(cache.pinned[0, :n_pre_pages].all())

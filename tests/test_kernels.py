@@ -1,7 +1,11 @@
 """Per-kernel validation: Pallas (interpret) vs pure-jnp oracle.
 
-Sweeps shapes (incl. GQA group sizes, partial pages, non-divisible
-block boundaries) and dtypes per the deliverable spec.
+Sweeps shapes (incl. GQA group sizes, ragged partial pages, index-table
+selection variants, non-divisible block boundaries) and dtypes per the
+deliverable spec.  The paged decode kernel is exercised through the
+index-table contract of ``ops.paged_decode_attention``: page-major
+cache storage ``[B, KV, S, P, hd]``, per-page live lengths, and an
+optional duplicate-free ``sel_idx`` page table.
 """
 import jax
 import jax.numpy as jnp
@@ -19,11 +23,19 @@ def _rand(shape, dtype):
     return jnp.asarray(x, dtype)
 
 
+def _ragged_page_len(B, S, P):
+    """Random live-prefix lengths incl. empty and partial pages; page 0
+    always full so every row has at least one live token."""
+    plen = RNG.integers(0, P + 1, (B, S)).astype(np.int32)
+    plen[:, 0] = P
+    return jnp.asarray(plen)
+
+
 TOL = {jnp.float32: 2e-5, jnp.bfloat16: 2e-2}
 
 
 # ---------------------------------------------------------------------------
-# paged decode attention
+# paged decode attention (zero-copy index-mapped kernel)
 # ---------------------------------------------------------------------------
 @pytest.mark.parametrize("B,H,KV,S,P,hd", [
     (1, 4, 4, 4, 8, 32),     # MHA
@@ -34,16 +46,14 @@ TOL = {jnp.float32: 2e-5, jnp.bfloat16: 2e-2}
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 def test_paged_decode_attention(B, H, KV, S, P, hd, dtype):
     q = _rand((B, H, hd), dtype)
-    k = _rand((B, S, P, KV, hd), dtype)
-    v = _rand((B, S, P, KV, hd), dtype)
-    mask = jnp.asarray(RNG.random((B, S, P)) > 0.4)
-    mask = mask.at[:, 0, 0].set(True)
+    k = _rand((B, KV, S, P, hd), dtype)
+    v = _rand((B, KV, S, P, hd), dtype)
+    page_len = _ragged_page_len(B, S, P)
     scale = 1.0 / hd ** 0.5
-    ctx0, pp0 = ops.paged_decode_attention(q, k, v, mask, scale,
+    ctx0, pp0 = ops.paged_decode_attention(q, k, v, page_len, None, scale,
                                            impl="jnp")
-    ctx1, pp1 = ops.paged_decode_attention(q, k, v, mask, scale,
-                                           impl="pallas_interpret",
-                                           block_tokens=2 * P)
+    ctx1, pp1 = ops.paged_decode_attention(q, k, v, page_len, None, scale,
+                                           impl="pallas_interpret")
     tol = TOL[dtype]
     np.testing.assert_allclose(np.asarray(ctx0, np.float32),
                                np.asarray(ctx1, np.float32), atol=tol,
@@ -51,14 +61,91 @@ def test_paged_decode_attention(B, H, KV, S, P, hd, dtype):
     np.testing.assert_allclose(pp0, pp1, atol=tol, rtol=tol)
 
 
+@pytest.mark.parametrize("order", ["ascending", "descending", "shuffled"])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_paged_decode_attention_sel_table(order, dtype):
+    """Subset selection through the index table: oracle/pallas parity
+    for every duplicate-free ordering, and the ordering itself must not
+    change the attention output (softmax over the union of tokens)."""
+    B, H, KV, S, P, hd = 2, 8, 2, 10, 8, 32
+    n_sel = 5
+    q = _rand((B, H, hd), dtype)
+    k = _rand((B, KV, S, P, hd), dtype)
+    v = _rand((B, KV, S, P, hd), dtype)
+    page_len = _ragged_page_len(B, S, P)
+    scale = 1.0 / hd ** 0.5
+
+    base = np.stack([RNG.permutation(S)[:n_sel] for _ in range(B)])
+    if order == "ascending":
+        sel = np.sort(base, axis=1)
+    elif order == "descending":
+        sel = -np.sort(-base, axis=1)
+    else:
+        sel = base
+    sel = jnp.asarray(sel.astype(np.int32))
+
+    ctx0, pp0 = ops.paged_decode_attention(q, k, v, page_len, sel, scale,
+                                           impl="jnp")
+    ctx1, pp1 = ops.paged_decode_attention(q, k, v, page_len, sel, scale,
+                                           impl="pallas_interpret")
+    tol = TOL[dtype]
+    np.testing.assert_allclose(np.asarray(ctx0, np.float32),
+                               np.asarray(ctx1, np.float32), atol=tol,
+                               rtol=tol)
+    np.testing.assert_allclose(pp0, pp1, atol=tol, rtol=tol)
+
+    # order invariance: ctx identical to the ascending table's
+    sel_sorted = jnp.sort(sel, axis=1)
+    ctx_s, pp_s = ops.paged_decode_attention(q, k, v, page_len, sel_sorted,
+                                             scale, impl="pallas_interpret")
+    np.testing.assert_allclose(np.asarray(ctx1, np.float32),
+                               np.asarray(ctx_s, np.float32), atol=tol,
+                               rtol=tol)
+    # per-page probs follow the table's ordering
+    inv = jnp.argsort(sel, axis=1)
+    np.testing.assert_allclose(jnp.take_along_axis(pp1, inv, axis=1),
+                               pp_s, atol=tol, rtol=tol)
+
+
 def test_paged_attention_prob_mass_sums_to_heads():
     B, H, KV, S, P, hd = 2, 8, 4, 6, 16, 64
     q = _rand((B, H, hd), jnp.float32)
-    k = _rand((B, S, P, KV, hd), jnp.float32)
-    v = _rand((B, S, P, KV, hd), jnp.float32)
-    mask = jnp.ones((B, S, P), bool)
-    _, pp = ops.paged_decode_attention(q, k, v, mask, 0.125, impl="jnp")
+    k = _rand((B, KV, S, P, hd), jnp.float32)
+    v = _rand((B, KV, S, P, hd), jnp.float32)
+    page_len = jnp.full((B, S), P, jnp.int32)
+    _, pp = ops.paged_decode_attention(q, k, v, page_len, None, 0.125,
+                                       impl="jnp")
     np.testing.assert_allclose(pp.sum(-1), H, rtol=1e-5)
+    # subset selection renormalizes over the selected tokens only
+    sel = jnp.asarray([[0, 2], [1, 3]], jnp.int32)
+    _, pp_sel = ops.paged_decode_attention(q, k, v, page_len, sel, 0.125,
+                                           impl="pallas_interpret")
+    np.testing.assert_allclose(pp_sel.sum(-1), H, rtol=1e-4)
+
+
+def test_raw_pallas_entries_require_interpret():
+    """Only ops.py chooses the execution mode: a direct kernel call
+    without an explicit ``interpret`` must not silently interpret."""
+    from repro.kernels.flash_prefill import flash_prefill_pallas
+    from repro.kernels.page_score import page_score_pallas
+    from repro.kernels.paged_attention import paged_decode_attention_pallas
+
+    B, KV, G, S, P, hd = 1, 2, 2, 4, 8, 32
+    qg = _rand((B, KV, G, hd), jnp.float32)
+    kp = _rand((B, KV, S, P, hd), jnp.float32)
+    sel = jnp.zeros((B, S), jnp.int32)
+    with pytest.raises(TypeError):
+        paged_decode_attention_pallas(sel, sel, qg, kp, kp, scale=1.0)
+    rep = _rand((B, KV, S, hd), jnp.float32)
+    with pytest.raises(TypeError):
+        page_score_pallas(qg, rep, rep, jnp.ones((B, S)), scale=1.0,
+                          block_pages=S)
+    qf = _rand((B, 8, KV * G, hd), jnp.float32)
+    kf = _rand((B, 8, KV, hd), jnp.float32)
+    with pytest.raises(TypeError):
+        flash_prefill_pallas(qf.transpose(0, 2, 1, 3),
+                             kf.transpose(0, 2, 1, 3),
+                             kf.transpose(0, 2, 1, 3), scale=1.0)
 
 
 # ---------------------------------------------------------------------------
@@ -70,8 +157,8 @@ def test_paged_attention_prob_mass_sums_to_heads():
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 def test_page_score(B, H, KV, S, hd, dtype):
     q = _rand((B, H, hd), dtype)
-    rmin = _rand((B, S, KV, hd), jnp.float32)
-    rmax = rmin + jnp.abs(_rand((B, S, KV, hd), jnp.float32))
+    rmin = _rand((B, KV, S, hd), jnp.float32)
+    rmax = rmin + jnp.abs(_rand((B, KV, S, hd), jnp.float32))
     mask = jnp.asarray(RNG.random((B, S)) > 0.3)
     s0 = ops.page_score(q, rmin, rmax, mask, 0.125, impl="jnp")
     s1 = ops.page_score(q, rmin, rmax, mask, 0.125,
@@ -84,14 +171,14 @@ def test_page_score_is_upper_bound():
     """Quest bound: page score >= every in-page token's true logit."""
     B, H, KV, S, P, hd = 1, 4, 2, 4, 8, 32
     q = _rand((B, H, hd), jnp.float32)
-    k = _rand((B, S, P, KV, hd), jnp.float32)
-    rmin = k.min(axis=2)
-    rmax = k.max(axis=2)
+    k = _rand((B, KV, S, P, hd), jnp.float32)
+    rmin = k.min(axis=3)
+    rmax = k.max(axis=3)
     mask = jnp.ones((B, S), bool)
     score = ops.page_score(q, rmin, rmax, mask, 1.0, impl="jnp")
     G = H // KV
     qg = q.reshape(B, KV, G, hd)
-    logits = jnp.einsum("bkgd,bspkd->bkgsp", qg, k)
+    logits = jnp.einsum("bkgd,bkspd->bkgsp", qg, k)
     true_max = logits.max(axis=(1, 2, 4))     # [B, S]
     assert bool(jnp.all(score >= true_max - 1e-5))
 

@@ -72,7 +72,8 @@ def test_raas_tight_budget_bounds_memory():
     raas = RaasConfig(policy="raas", budget_tokens=16, page_size=4)
     _, cache = _teacher_force(TINY, params, tokens, raas, pre)
     attn = cache.per_pos[0].attn
-    assert attn.k_pages.shape[2] == 4          # O(L) slots, static
+    # stacked [n_periods, B, KV, S, P, hd]: slot axis is dim 3
+    assert attn.k_pages.shape[3] == 4          # O(L) slots, static
     assert int(attn.page_len.sum()) <= 4 * 4 * TINY.n_layers
 
 
