@@ -19,11 +19,11 @@ import time
 def main(argv=None) -> None:
     p = argparse.ArgumentParser()
     p.add_argument("--only", default="",
-                   help="comma list: fig6,fig7,fig8,fig9,roofline")
+                   help="comma list: fig6,fig7,fig8,fig9,serving,roofline")
     p.add_argument("--quick", action="store_true")
     args = p.parse_args(argv)
     want = set(args.only.split(",")) if args.only else {
-        "fig6", "fig7", "fig8", "fig9", "fidelity", "roofline"}
+        "fig6", "fig7", "fig8", "fig9", "serving", "fidelity", "roofline"}
 
     n6 = 6 if args.quick else 16
     n8 = 4 if args.quick else 12
@@ -34,6 +34,9 @@ def main(argv=None) -> None:
     if "fig7" in want:
         from benchmarks import fig7_latency_memory
         fig7_latency_memory.run()
+    if "serving" in want:
+        from benchmarks import serving_throughput
+        serving_throughput.run(n_requests=6 if args.quick else 15)
     if "fig6" in want:
         from benchmarks import fig6_accuracy
         fig6_accuracy.run(n_eval=n6)

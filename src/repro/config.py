@@ -261,6 +261,40 @@ class RaasConfig:
 
 
 # ---------------------------------------------------------------------------
+# Serving deployment config (the engine's static geometry).
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class ServeConfig:
+    """Static geometry of the continuous-batching serving engine.
+
+    ``max_prefill`` is the per-lane *prompt capacity*: how many prompt
+    tokens a lane's pinned prefill region can hold (prompts longer than
+    this are rejected at admission with a ValueError — never silently
+    truncated).  ``prefill_chunk`` is the per-dispatch ingest width:
+    long prompts are fed in chunks of this many tokens, interleaved
+    with decode chunks, so admitting a long prompt never stalls active
+    decode lanes.  It is rounded up to a page multiple by the engine so
+    every non-final chunk of a prompt stays page-aligned.
+    """
+
+    batch_slots: int = 4
+    max_seq: int = 1024
+    max_prefill: int = 128
+    prefill_chunk: int = 64
+    chunk_steps: int = 8
+
+    def __post_init__(self) -> None:
+        if self.max_prefill > self.max_seq:
+            raise ValueError("max_prefill cannot exceed max_seq")
+        if self.prefill_chunk < 1:
+            raise ValueError("prefill_chunk must be positive")
+        if self.chunk_steps < 1:
+            raise ValueError("chunk_steps must be positive")
+        if self.batch_slots < 1:
+            raise ValueError("batch_slots must be positive")
+
+
+# ---------------------------------------------------------------------------
 # Run config: shapes, meshes, dtypes.
 # ---------------------------------------------------------------------------
 INPUT_SHAPES = {
@@ -289,6 +323,7 @@ class RunConfig:
     seed: int = 0
     # serving / sparsity
     raas: RaasConfig = field(default_factory=RaasConfig)
+    serve: ServeConfig = field(default_factory=ServeConfig)
 
     @property
     def seq_len(self) -> int:

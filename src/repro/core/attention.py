@@ -41,6 +41,7 @@ def decode_attend(cache: pc.PagedCache, q: jnp.ndarray, k_new: jnp.ndarray,
                   v_new: jnp.ndarray, cfg: RaasConfig,
                   policy: Optional[SparsityPolicy] = None,
                   has_prefill: bool = True,
+                  write_mask: Optional[jnp.ndarray] = None,
                   impl: str = "jnp") -> Tuple[pc.PagedCache, jnp.ndarray,
                                               PolicyStats]:
     """One decode step of sparse attention for one layer.
@@ -51,6 +52,12 @@ def decode_attend(cache: pc.PagedCache, q: jnp.ndarray, k_new: jnp.ndarray,
 
     ``policy`` defaults to the registered policy for ``cfg.policy``;
     hot paths resolve it once and pass the object through.
+
+    ``write_mask`` [B] bool (``None`` = all lanes): lanes where it is
+    ``False`` are *frozen* — no KV append, no eviction, no priority
+    refresh; their cache bits are bit-exactly unchanged by this step.
+    The serving engine uses this to let finished lanes and lanes still
+    mid-prefill ride along in a batched decode dispatch.
 
     Returns (cache', ctx [B, H, hd], stats).
     """
@@ -65,6 +72,7 @@ def decode_attend(cache: pc.PagedCache, q: jnp.ndarray, k_new: jnp.ndarray,
         new_page_priority=policy.new_page_priority(cache, cfg),
         protect_recent=policy.protect_recent(cfg),
         pin_below_pos=policy.sink_pin(has_prefill, cfg),
+        write_mask=write_mask,
     )
 
     # -- 2. representative page scores -------------------------------------
@@ -97,7 +105,21 @@ def decode_attend(cache: pc.PagedCache, q: jnp.ndarray, k_new: jnp.ndarray,
             page_probs = jnp.zeros(valid.shape, jnp.float32)
 
     # -- 5. priority refresh -------------------------------------------------
-    cache = policy.refresh_priority(cache, scores, page_probs, cfg)
+    refreshed = policy.refresh_priority(cache, scores, page_probs, cfg)
+    if write_mask is not None:
+        # frozen lanes keep their cache byte-for-byte: a lane
+        # mid-prefill or already finished must be invariant under other
+        # lanes' decode dispatches.  Blend every leaf, not just
+        # `priority` — refresh_priority is an open extension point and
+        # an out-of-tree policy may touch any field.
+        refreshed = jax.tree.map(
+            # untouched leaves come back as the same array object —
+            # skip them so built-in policies pay O(S), not O(cache)
+            lambda new, old: old if new is old else jnp.where(
+                write_mask.reshape((-1,) + (1,) * (new.ndim - 1)),
+                new, old),
+            refreshed, cache)
+    cache = refreshed
 
     stats = PolicyStats(
         evicted_slot=evicted,

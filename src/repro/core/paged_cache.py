@@ -34,7 +34,7 @@ argmin priority among unpinned".
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Tuple
+from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -175,6 +175,108 @@ def ingest_prefill(cache: PagedCache, k: jnp.ndarray, v: jnp.ndarray,
     )
 
 
+def reset_lanes(cache: PagedCache, mask: jnp.ndarray) -> PagedCache:
+    """Return ``cache`` with the lanes selected by ``mask`` [B] bool
+    restored to the fresh (empty) state, entirely on device.
+
+    This is how the engine recycles a lane at admission: metadata is
+    cleared (``page_len == 0`` makes every stale K/V byte dead — the
+    prefix contract masks it in every kernel), so no K/V page needs to
+    be zeroed, copied or re-materialized on host.
+    """
+    m1 = mask[:, None]
+    m3 = mask[:, None, None, None]
+    return cache._replace(
+        priority=jnp.where(m1, 0.0, cache.priority),
+        page_pos=jnp.where(m1, -1, cache.page_pos),
+        page_len=jnp.where(m1, 0, cache.page_len),
+        pinned=jnp.where(m1, False, cache.pinned),
+        rep_min=jnp.where(m3, INF, cache.rep_min),
+        rep_max=jnp.where(m3, -INF, cache.rep_max),
+        active_slot=jnp.where(mask, -1, cache.active_slot),
+        cur_len=jnp.where(mask, 0, cache.cur_len),
+    )
+
+
+def ingest_prefill_chunk(cache: PagedCache, k: jnp.ndarray, v: jnp.ndarray,
+                         chunk_lens: jnp.ndarray,
+                         pin: bool = True) -> PagedCache:
+    """Append one *chunk* of prefill KV per lane at ``cache.cur_len``.
+
+    k, v: [B, C, KV, hd] (post-RoPE, token-major); ``chunk_lens`` [B]
+    i32 live tokens of this chunk per lane (0 = the lane is a no-op:
+    nothing in it is touched — lanes mid-decode or empty ride along in
+    a batched chunked-prefill dispatch unharmed).
+
+    The engine keeps chunks page-aligned: every lane with
+    ``chunk_lens > 0`` has ``cur_len % page_size == 0`` (it dispatches
+    chunks of ``prefill_chunk`` tokens, a page multiple, so only the
+    *final* chunk of a prompt is ragged — after which the lane leaves
+    prefill).  Pages are written at slots ``cur_len // P ..``, which
+    keeps the whole prefill of a lane contiguous from slot 0 exactly as
+    :func:`ingest_prefill` lays it out, so a multi-chunk ingest is
+    indistinguishable from a one-shot ingest of the same tokens.
+
+    Capacity is the caller's contract (checked host-side at admission):
+    out-of-range slots are clipped and their writes are no-op blends.
+    """
+    B, C, KV, hd = k.shape
+    S, P = cache.n_slots, cache.page_size
+    nC = -(-C // P)
+    pad = nC * P - C
+    kp = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0))) \
+        .reshape(B, nC, P, KV, hd)
+    vp = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0))) \
+        .reshape(B, nC, P, KV, hd)
+
+    start = cache.cur_len                                     # [B]
+    pos_in_chunk = jnp.arange(nC * P).reshape(nC, P)
+    live = pos_in_chunk[None] < chunk_lens[:, None, None]     # [B, nC, P]
+    plen = live.sum(-1).astype(jnp.int32)                     # [B, nC]
+    raw_slots = start[:, None] // P + jnp.arange(nC)[None]    # [B, nC]
+    # pages beyond capacity must not overwrite the clipped slot
+    write = (plen > 0) & (raw_slots < S)                      # [B, nC]
+    slots = jnp.clip(raw_slots, 0, S - 1)
+    ppos = start[:, None] + pos_in_chunk[:, 0][None]          # [B, nC]
+
+    bidx = jnp.arange(B)[:, None]
+    # per-page representative keys over live chunk tokens
+    kf = jnp.where(live[..., None, None], kp.astype(jnp.float32), INF)
+    rmin_new = kf.min(axis=2)                                 # [B, nC, KV, hd]
+    kf = jnp.where(live[..., None, None], kp.astype(jnp.float32), -INF)
+    rmax_new = kf.max(axis=2)
+
+    # [B, nC, KV, P, hd] to match the advanced-indexing gather order
+    kw = jnp.where(live[..., None, None], kp, 0).transpose(0, 1, 3, 2, 4)
+    vw = jnp.where(live[..., None, None], vp, 0).transpose(0, 1, 3, 2, 4)
+    w5 = write[:, :, None, None, None]
+    k_pages = cache.k_pages.at[bidx, :, slots].set(
+        jnp.where(w5, kw.astype(cache.k_pages.dtype),
+                  cache.k_pages[bidx, :, slots]))
+    v_pages = cache.v_pages.at[bidx, :, slots].set(
+        jnp.where(w5, vw.astype(cache.v_pages.dtype),
+                  cache.v_pages[bidx, :, slots]))
+    w4 = write[:, :, None, None]
+    rep_min = cache.rep_min.at[bidx, :, slots].set(
+        jnp.where(w4, rmin_new, cache.rep_min[bidx, :, slots]))
+    rep_max = cache.rep_max.at[bidx, :, slots].set(
+        jnp.where(w4, rmax_new, cache.rep_max[bidx, :, slots]))
+    return cache._replace(
+        k_pages=k_pages, v_pages=v_pages,
+        rep_min=rep_min, rep_max=rep_max,
+        priority=cache.priority.at[bidx, slots].set(
+            jnp.where(write, ppos.astype(jnp.float32),
+                      cache.priority[bidx, slots])),
+        page_pos=cache.page_pos.at[bidx, slots].set(
+            jnp.where(write, ppos, cache.page_pos[bidx, slots])),
+        page_len=cache.page_len.at[bidx, slots].set(
+            jnp.where(write, plen, cache.page_len[bidx, slots])),
+        pinned=cache.pinned.at[bidx, slots].set(
+            jnp.where(write, jnp.bool_(pin), cache.pinned[bidx, slots])),
+        cur_len=cache.cur_len + chunk_lens.astype(jnp.int32),
+    )
+
+
 def _eviction_key(cache: PagedCache, protect_recent: int) -> jnp.ndarray:
     """[B, S] f32 — argmin of this picks the victim slot.
 
@@ -207,7 +309,9 @@ def _eviction_key(cache: PagedCache, protect_recent: int) -> jnp.ndarray:
 def append_token(cache: PagedCache, k_new: jnp.ndarray, v_new: jnp.ndarray,
                  new_page_priority: jnp.ndarray,
                  protect_recent: int = 0,
-                 pin_below_pos: int = 0) -> Tuple[PagedCache, jnp.ndarray]:
+                 pin_below_pos: int = 0,
+                 write_mask: Optional[jnp.ndarray] = None
+                 ) -> Tuple[PagedCache, jnp.ndarray]:
     """Append one token's KV per sequence, evicting if necessary.
 
     k_new, v_new: [B, KV, hd] (post-RoPE).  ``new_page_priority``: [B]
@@ -215,15 +319,23 @@ def append_token(cache: PagedCache, k_new: jnp.ndarray, v_new: jnp.ndarray,
     pins pages whose first token position is below the threshold
     (StreamingLLM sink behaviour for prompt-less decode).
 
+    ``write_mask`` [B] bool (``None`` = all lanes): lanes where it is
+    ``False`` are left bit-exactly unchanged — no allocation, no
+    eviction, no KV write, no ``cur_len`` advance.  This is how the
+    serving engine freezes finished lanes and lanes still mid-prefill
+    while the fused decode chunk advances the others.
+
     The KV write is a single-slot in-place update of the page-major
     cache (O(P) bytes per kv head) — never a copy of other pages.
 
     Returns (cache, evicted_slot [B] i32; -1 where no eviction happened
-    — i.e. a free slot was used or the active page had room).
+    — i.e. a free slot was used, the active page had room, or the lane
+    was masked off).
     """
     B, KV, hd = k_new.shape
     S, P = cache.n_slots, cache.page_size
     barange = jnp.arange(B)
+    wm = jnp.ones((B,), bool) if write_mask is None else write_mask
 
     active = cache.active_slot
     have_active = active >= 0
@@ -231,7 +343,7 @@ def append_token(cache: PagedCache, k_new: jnp.ndarray, v_new: jnp.ndarray,
     active_len = cache.page_len[barange, active_idx]
     active_full = jnp.where(have_active, active_len >= P, True)
 
-    need_alloc = active_full
+    need_alloc = active_full & wm
     evict_key = _eviction_key(cache, protect_recent)
     victim = jnp.argmin(evict_key, axis=1).astype(jnp.int32)
     victim_was_free = cache.page_pos[barange, victim] < 0
@@ -266,21 +378,29 @@ def append_token(cache: PagedCache, k_new: jnp.ndarray, v_new: jnp.ndarray,
         jnp.where(need_alloc[:, None, None, None], 0,
                   cache.v_pages[barange, :, slot]))
 
-    offset = jnp.where(need_alloc, 0, active_len)
+    # masked lanes write their existing byte back at a safe offset —
+    # a bit-exact no-op — so the scatter shape stays static.
+    offset = jnp.where(wm, jnp.where(need_alloc, 0, active_len), 0)
+    w3 = wm[:, None, None]                     # [B,1,1] vs [B,KV,hd]
     k_pages = k_pages.at[barange, :, slot, offset].set(
-        k_new.astype(k_pages.dtype))
+        jnp.where(w3, k_new.astype(k_pages.dtype),
+                  k_pages[barange, :, slot, offset]))
     v_pages = v_pages.at[barange, :, slot, offset].set(
-        v_new.astype(v_pages.dtype))
-    rep_min = rep_min.at[barange, :, slot].min(k_new.astype(jnp.float32))
-    rep_max = rep_max.at[barange, :, slot].max(k_new.astype(jnp.float32))
-    page_len = page_len.at[barange, slot].add(1)
+        jnp.where(w3, v_new.astype(v_pages.dtype),
+                  v_pages[barange, :, slot, offset]))
+    # +/-INF are the identity elements of the running min/max
+    rep_min = rep_min.at[barange, :, slot].min(
+        jnp.where(w3, k_new.astype(jnp.float32), INF))
+    rep_max = rep_max.at[barange, :, slot].max(
+        jnp.where(w3, k_new.astype(jnp.float32), -INF))
+    page_len = page_len.at[barange, slot].add(wm.astype(jnp.int32))
 
     new_cache = cache._replace(
         k_pages=k_pages, v_pages=v_pages,
         rep_min=rep_min, rep_max=rep_max,
         priority=priority, page_pos=page_pos, page_len=page_len,
         pinned=pinned,
-        active_slot=slot,
-        cur_len=cache.cur_len + 1,
+        active_slot=jnp.where(wm, slot, cache.active_slot),
+        cur_len=cache.cur_len + wm.astype(jnp.int32),
     )
     return new_cache, evicted

@@ -4,9 +4,18 @@ The paper keeps the prefill stage dense (sparsity applies to decode
 only), so this is a standard online-softmax flash kernel, GQA-aware via
 the BlockSpec index map (kv head = query head // G).
 
-Grid (B, H, nQ, nK); the kv axis is sequential (accumulation), causal
-upper-triangle blocks are skipped with @pl.when so no FLOPs or VMEM
-traffic is spent on them.
+Chunk-resume support: the serving engine ingests long prompts in
+chunks, several lanes per dispatch, each lane resumed at its own
+progress.  The per-lane query offset and live kv length therefore
+arrive as a scalar-prefetched ``seq_info [2, B]`` i32 table (row 0 =
+q_offset, row 1 = kv_len) living in SMEM — the causal mask and the
+ragged-tail mask are computed against the lane's entries, and the
+upper-triangle block skip compares against the lane's offset at run
+time instead of a compile-time constant.
+
+Grid (B, H, nQ, nK); the kv axis is sequential (accumulation), blocks
+entirely in a lane's causal future are skipped with @pl.when so no
+FLOPs or VMEM traffic is spent on them.
 """
 from __future__ import annotations
 
@@ -20,11 +29,15 @@ import jax.experimental.pallas.tpu as pltpu
 NEG_INF = -1e30
 
 
-def _kernel(scale: float, q_offset: int, kv_len: int, bQ: int, bK: int,
+def _kernel(scale: float, bQ: int, bK: int,
+            info_ref,                              # [2, B] SMEM (prefetch)
             q_ref, k_ref, v_ref, o_ref, m_s, l_s, acc_s):
+    b = pl.program_id(0)
     qi = pl.program_id(2)
     ki = pl.program_id(3)
     nK = pl.num_programs(3)
+    q_offset = info_ref[0, b]
+    kv_len = info_ref[1, b]
 
     @pl.when(ki == 0)
     def _init():
@@ -33,7 +46,7 @@ def _kernel(scale: float, q_offset: int, kv_len: int, bQ: int, bK: int,
         acc_s[...] = jnp.zeros_like(acc_s)
 
     # causal block skip: the whole kv block is in the future of the
-    # whole q block.
+    # whole q block (per-lane offset, so this is a run-time predicate).
     last_q_pos = qi * bQ + (bQ - 1) + q_offset
     first_k_pos = ki * bK
 
@@ -68,16 +81,19 @@ def _kernel(scale: float, q_offset: int, kv_len: int, bQ: int, bK: int,
         o_ref[0, 0] = (acc_s[...] / denom[:, None]).astype(o_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("scale", "q_offset", "kv_len",
-                                             "block_q", "block_k",
+@functools.partial(jax.jit, static_argnames=("scale", "block_q", "block_k",
                                              "interpret"))
-def flash_prefill_pallas(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
-                         scale: float, q_offset: int = 0, kv_len: int = 0,
+def flash_prefill_pallas(seq_info: jnp.ndarray,
+                         q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                         scale: float,
                          block_q: int = 256, block_k: int = 256, *,
                          interpret: bool) -> jnp.ndarray:
     """q [B,H,Sq,hd]; k/v [B,KV,Skv,hd] (padded to block multiples).
 
-    ``kv_len``: true kv length (<= Skv); padding keys are masked.
+    ``seq_info`` [2, B] i32 (scalar-prefetched): row 0 is each lane's
+    query offset within its kv sequence (0 for one-shot prefill, the
+    lane's resume position for chunked prefill), row 1 each lane's true
+    kv length (<= Skv; padding and not-yet-ingested keys are masked).
     ``interpret`` is mandatory: only ``ops.py`` decides the execution
     mode.  Returns ctx [B, H, Sq, hd].
     """
@@ -86,31 +102,36 @@ def flash_prefill_pallas(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
     G = H // KV
     bQ, bK = min(block_q, Sq), min(block_k, Skv)
     assert Sq % bQ == 0 and Skv % bK == 0
+    assert seq_info.shape == (2, B)
     nQ, nK = Sq // bQ, Skv // bK
-    kv_len = kv_len or Skv
 
-    kernel = functools.partial(_kernel, scale, q_offset, kv_len, bQ, bK)
-    return pl.pallas_call(
-        kernel,
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
         grid=(B, H, nQ, nK),
         in_specs=[
-            pl.BlockSpec((1, 1, bQ, hd), lambda b, h, qi, ki: (b, h, qi, 0)),
+            pl.BlockSpec((1, 1, bQ, hd),
+                         lambda b, h, qi, ki, info: (b, h, qi, 0)),
             pl.BlockSpec((1, 1, bK, hd),
-                         lambda b, h, qi, ki: (b, h // G, ki, 0)),
+                         lambda b, h, qi, ki, info: (b, h // G, ki, 0)),
             pl.BlockSpec((1, 1, bK, hd),
-                         lambda b, h, qi, ki: (b, h // G, ki, 0)),
+                         lambda b, h, qi, ki, info: (b, h // G, ki, 0)),
         ],
         out_specs=pl.BlockSpec((1, 1, bQ, hd),
-                               lambda b, h, qi, ki: (b, h, qi, 0)),
+                               lambda b, h, qi, ki, info: (b, h, qi, 0)),
         scratch_shapes=[
             pltpu.VMEM((bQ,), jnp.float32),
             pltpu.VMEM((bQ,), jnp.float32),
             pltpu.VMEM((bQ, hd), jnp.float32),
         ],
+    )
+    kernel = functools.partial(_kernel, scale, bQ, bK)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((B, H, Sq, hd), q.dtype),
         compiler_params=pltpu.TPUCompilerParams(
             dimension_semantics=("parallel", "parallel", "parallel",
                                  "arbitrary")),
         interpret=interpret,
         name="raas_flash_prefill",
-    )(q, k, v)
+    )(seq_info, q, k, v)

@@ -36,6 +36,7 @@ from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.kernels import ref
 
@@ -142,21 +143,40 @@ def page_score(q: jnp.ndarray, rep_min: jnp.ndarray, rep_max: jnp.ndarray,
 # Flash prefill
 # ---------------------------------------------------------------------------
 def flash_prefill(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
-                  scale: float, q_offset: int = 0, impl: str = "jnp",
+                  scale: float, q_offset=0, kv_len=None,
+                  impl: str = "jnp",
                   block_q: int = 256, block_k: int = 256) -> jnp.ndarray:
     """q [B,Sq,H,hd]; k/v [B,Skv,KV,hd] -> ctx [B,Sq,H,hd] (causal).
+
+    ``q_offset`` places the queries within the kv sequence: a python
+    int for one-shot prefill, or a per-lane [B] i32 array for
+    chunk-resume (each serving lane continues at its own progress).
+    ``kv_len`` (int, [B] i32, or None = all of Skv) masks keys at
+    positions >= it — padding / not-yet-ingested cache tail.
 
     impl "jnp" switches to the memory-bounded scan flash (custom VJP)
     automatically once the kv length would make the naive [Sq, Skv]
     logits tensor the memory bottleneck; "jnp_naive" forces the oracle.
+    Per-lane (array) offsets are a serving-path feature: they route to
+    the oracle / Pallas kernel, never to the training scan flash.
     """
-    if impl == "jnp" and k.shape[1] > 1024:
+    _scalar = (int, np.integer)
+    ragged = (q_offset is not None and not isinstance(q_offset, _scalar)) \
+        or (kv_len is not None and not isinstance(kv_len, _scalar))
+    if impl == "jnp" and k.shape[1] > 1024 and not ragged \
+            and kv_len is None:
         impl = "jnp_flash"
     if impl == "jnp_flash":
+        if ragged or kv_len is not None:
+            # flash_causal has no kv mask and a scalar-only offset; a
+            # silent drop of either argument would attend dead keys
+            raise ValueError(
+                "impl='jnp_flash' supports neither kv_len nor per-lane "
+                "offsets; use the oracle ('jnp') or the Pallas kernel")
         from repro.kernels.flash_scan import flash_causal
         return flash_causal(q, k, v, scale, q_offset, block_k)
     if impl in ("jnp", "jnp_naive"):
-        return ref.flash_prefill_ref(q, k, v, scale, q_offset)
+        return ref.flash_prefill_ref(q, k, v, scale, q_offset, kv_len)
     from repro.kernels.flash_prefill import flash_prefill_pallas
 
     B, Sq, H, hd = q.shape
@@ -171,7 +191,12 @@ def flash_prefill(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
     if Skvp != Skv:
         kt = jnp.pad(kt, ((0, 0), (0, 0), (0, Skvp - Skv), (0, 0)))
         vt = jnp.pad(vt, ((0, 0), (0, 0), (0, Skvp - Skv), (0, 0)))
+    # per-lane chunk-resume table: [2, B] i32, scalar-prefetched.
+    off = jnp.broadcast_to(jnp.asarray(
+        0 if q_offset is None else q_offset, jnp.int32).reshape(-1), (B,))
+    lim = jnp.broadcast_to(jnp.asarray(
+        Skv if kv_len is None else kv_len, jnp.int32).reshape(-1), (B,))
     out = flash_prefill_pallas(
-        qt, kt, vt, scale=scale, q_offset=q_offset, kv_len=Skv,
+        jnp.stack([off, lim]), qt, kt, vt, scale=scale,
         block_q=bQ, block_k=bK, interpret=(impl == "pallas_interpret"))
     return out[:, :, :Sq].transpose(0, 2, 1, 3)

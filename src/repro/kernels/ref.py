@@ -107,22 +107,31 @@ def page_score_ref(q: jnp.ndarray, rep_min: jnp.ndarray, rep_max: jnp.ndarray,
 
 
 def flash_prefill_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
-                      scale: float, q_offset: int = 0) -> jnp.ndarray:
+                      scale: float, q_offset=0,
+                      kv_len=None) -> jnp.ndarray:
     """Causal full attention for the prefill stage.
 
     q [B, Sq, H, hd], k/v [B, Skv, KV, hd] -> [B, Sq, H, hd].
     ``q_offset`` places the query block at absolute position offset
-    within the kv sequence (for chunked prefill).
+    within the kv sequence: a python int for uniform one-shot prefill,
+    or a per-lane [B] i32 array for chunk-resume (each lane's chunk
+    resumes at its own progress).  ``kv_len`` (int or [B] i32, None =
+    all of Skv) masks keys at positions >= it — the not-yet-ingested
+    tail of a ragged chunked-prefill batch.
     """
     B, Sq, H, hd = q.shape
     Skv, KV = k.shape[1], k.shape[2]
     G = H // KV
     qg = q.reshape(B, Sq, KV, G, hd).astype(jnp.float32)
     logits = jnp.einsum("bqkgd,bskd->bkgqs", qg, k.astype(jnp.float32)) * scale
-    qpos = jnp.arange(Sq) + q_offset
+    off = jnp.asarray(q_offset, jnp.int32).reshape(-1, 1)          # [B|1, 1]
+    qpos = jnp.arange(Sq)[None, :] + off                           # [B|1, Sq]
     kpos = jnp.arange(Skv)
-    causal = qpos[:, None] >= kpos[None, :]
-    logits = jnp.where(causal[None, None, None], logits, _NEG_INF)
+    causal = qpos[:, :, None] >= kpos[None, None, :]               # [B|1,Sq,Skv]
+    if kv_len is not None:
+        lim = jnp.asarray(kv_len, jnp.int32).reshape(-1, 1, 1)
+        causal = causal & (kpos[None, None, :] < lim)
+    logits = jnp.where(causal[:, None, None], logits, _NEG_INF)
     m = jnp.max(logits, axis=-1, keepdims=True)
     e = jnp.exp(logits - m)
     e = jnp.where(logits <= _NEG_INF / 2, 0.0, e)

@@ -14,7 +14,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.config import RaasConfig, get_config
+from repro.config import RaasConfig, ServeConfig, get_config
 from repro.core.policy_base import available_policies
 from repro.data.pipeline import DataConfig, prompt_of, specials, verify_answer
 from repro.models import model as M
@@ -32,6 +32,8 @@ def main(argv=None) -> None:
     p.add_argument("--requests", type=int, default=8)
     p.add_argument("--slots", type=int, default=4)
     p.add_argument("--max-new", type=int, default=96)
+    p.add_argument("--prefill-chunk", type=int, default=16,
+                   help="prompt tokens ingested per prefill dispatch")
     p.add_argument("--ckpt", default="",
                    help="optional params checkpoint (msgpack)")
     args = p.parse_args(argv)
@@ -49,8 +51,10 @@ def main(argv=None) -> None:
 
     raas = RaasConfig(policy=args.policy, budget_tokens=args.budget,
                       page_size=16)
-    eng = Engine(params, cfg, raas, batch_slots=args.slots,
-                 max_seq=args.max_new + 64, max_prefill=32)
+    serve_cfg = ServeConfig(batch_slots=args.slots,
+                            max_seq=args.max_new + 64, max_prefill=32,
+                            prefill_chunk=args.prefill_chunk)
+    eng = Engine(params, cfg, raas, serve_cfg)
     sp = specials(dc)
     reqs = []
     for i in range(args.requests):
@@ -61,13 +65,16 @@ def main(argv=None) -> None:
     t0 = time.time()
     done = serve(eng, reqs)
     jct = time.time() - t0
-    toks = sum(len(r.output) for r in done)
     acc = np.mean([verify_answer(dc, 10_000 + r.uid,
                                  np.asarray(r.output)) for r in done])
+    # throughput from the engine's true emitted-token count (device-side
+    # mask), not dispatches x chunk length
     print(f"policy={args.policy} budget={args.budget} "
           f"requests={len(done)} JCT={jct:.2f}s "
-          f"throughput={toks/jct:.1f} tok/s accuracy={acc:.2f} "
-          f"kv_bytes={eng.kv_cache_bytes()/1e6:.1f}MB")
+          f"throughput={eng.tokens_emitted/jct:.1f} tok/s "
+          f"accuracy={acc:.2f} "
+          f"kv_bytes={eng.kv_cache_bytes()/1e6:.1f}MB "
+          f"dispatches={eng.dispatches}+{eng.prefill_dispatches}pf")
 
 
 if __name__ == "__main__":

@@ -131,17 +131,65 @@ def block_prefill(params: dict, cfg: ModelConfig, h: jnp.ndarray,
     return h, cache, aux
 
 
+def block_prefill_chunk(params: dict, cfg: ModelConfig, h: jnp.ndarray,
+                        start: jnp.ndarray, chunk_lens: jnp.ndarray,
+                        cache: BlockCache, mixer: str, ffn_kind: str,
+                        ctx_pages: int, impl: str = "jnp",
+                        capacity_factor: float = 2.0
+                        ) -> Tuple[jnp.ndarray, BlockCache, jnp.ndarray]:
+    """One *chunk* of prefill, resumable per lane.
+
+    h [B, C, D] is the chunk's hidden states; ``start`` [B] i32 is each
+    lane's resume position (tokens already ingested), ``chunk_lens``
+    [B] i32 the live tokens of this chunk (0 = lane rides along
+    untouched).  ``ctx_pages`` (static) bounds the prefill region of
+    the paged cache the chunk attends to: the chunk's keys are ingested
+    first, then attention runs over the first ``ctx_pages`` slots
+    gathered token-major — prefill pages are laid out contiguously from
+    slot 0, so that region IS positions [0, ctx_pages * P) and the
+    per-lane causal mask (q_offset = start) makes the chunk attend to
+    exactly its own past.  Returns (h', cache', aux).
+    """
+    hn = layers.rmsnorm(params["norm_mixer"], h, cfg.norm_eps)
+    if mixer != ATTN:
+        raise NotImplementedError(
+            "chunked prefill requires attention mixers; mamba chunk-"
+            "resume state is not carried yet — serve SSM/hybrid archs "
+            "through the one-shot prefill path")
+    B, C = h.shape[:2]
+    positions = start[:, None] + jnp.arange(C, dtype=jnp.int32)[None]
+    q, k, v = layers.qkv_project(params["attn"], cfg, hn, positions)
+    new_pc = pc.ingest_prefill_chunk(cache.attn, k, v, chunk_lens)
+    P = new_pc.page_size
+    KV, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    # token-major view of the (contiguous) prefill region, incl. the
+    # chunk just ingested
+    kc = new_pc.k_pages[:, :, :ctx_pages].transpose(0, 2, 3, 1, 4) \
+        .reshape(B, ctx_pages * P, KV, hd)
+    vc = new_pc.v_pages[:, :, :ctx_pages].transpose(0, 2, 3, 1, 4) \
+        .reshape(B, ctx_pages * P, KV, hd)
+    scale = 1.0 / (cfg.resolved_head_dim ** 0.5)
+    ctx = ops.flash_prefill(q, kc, vc, scale, q_offset=start,
+                            kv_len=start + chunk_lens, impl=impl)
+    h = h + layers.attn_output(params["attn"], ctx)
+    cache = cache._replace(attn=new_pc)
+    h, aux = _ffn_step(params, cfg, h, ffn_kind, capacity_factor)
+    return h, cache, aux
+
+
 def block_decode(params: dict, cfg: ModelConfig, h: jnp.ndarray,
                  pos: jnp.ndarray, cache: BlockCache, mixer: str,
                  ffn_kind: str, raas: RaasConfig, impl: str = "jnp",
                  capacity_factor: float = 4.0,
-                 policy=None
+                 policy=None, write_mask=None
                  ) -> Tuple[jnp.ndarray, BlockCache, Optional[object]]:
     """One-token step.  h [B, D], pos [B] -> (h', cache', stats).
 
     ``policy`` is the resolved :class:`SparsityPolicy` object (defaults
-    to the registered policy for ``raas.policy``).  ``stats`` is the
-    attention layer's :class:`PolicyStats`, or ``None`` for
+    to the registered policy for ``raas.policy``).  ``write_mask`` [B]
+    bool freezes the caches of lanes where it is False (finished / mid-
+    prefill lanes riding along in a batched dispatch).  ``stats`` is
+    the attention layer's :class:`PolicyStats`, or ``None`` for
     attention-free mixers.
     """
     stats = None
@@ -151,13 +199,20 @@ def block_decode(params: dict, cfg: ModelConfig, h: jnp.ndarray,
             params["attn"], cfg, hn[:, None], pos[:, None])
         new_cache, ctx, stats = core_attention.decode_attend(
             cache.attn, q[:, 0], k[:, 0], v[:, 0], raas, policy=policy,
-            impl=impl)
+            write_mask=write_mask, impl=impl)
         h = h + layers.attn_output(params["attn"], ctx[:, None])[:, 0]
         cache = cache._replace(attn=new_cache)
     else:
         out, mstate = mamba2.mamba_step(params["mamba"], hn, cache.mamba,
                                         cfg.mamba, cfg.d_model, cfg.norm_eps)
         h = h + out
+        if write_mask is not None:
+            # frozen lanes keep their SSM state bit-exactly
+            mstate = jax.tree.map(
+                lambda new, old: jnp.where(
+                    write_mask.reshape((-1,) + (1,) * (new.ndim - 1)),
+                    new, old),
+                mstate, cache.mamba)
         cache = cache._replace(mamba=mstate)
     h, _aux = _ffn_step(params, cfg, h[:, None], ffn_kind,
                         capacity_factor)

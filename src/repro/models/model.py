@@ -201,6 +201,55 @@ def prefill(params: dict, cfg: ModelConfig, tokens: jnp.ndarray,
 
 
 # ---------------------------------------------------------------------------
+# Chunked prefill (resumable long-prompt ingest, several lanes at once)
+# ---------------------------------------------------------------------------
+def prefill_chunk(params: dict, cfg: ModelConfig, tokens: jnp.ndarray,
+                  chunk_lens: jnp.ndarray, start: jnp.ndarray,
+                  cache: ModelCache, *, ctx_pages: int,
+                  impl: str = "jnp") -> Tuple[ModelCache, jnp.ndarray]:
+    """Ingest up to one chunk of prompt tokens per lane, resumably.
+
+    tokens [B, C] i32; ``chunk_lens`` [B] live tokens per lane this
+    chunk (0 = lane untouched — finished / decoding / empty lanes ride
+    along in the batched dispatch); ``start`` [B] each lane's resume
+    position (tokens already ingested; page-aligned for live lanes —
+    the engine keeps chunks at a page multiple).  ``ctx_pages``
+    (static) is the prefill page capacity the chunk attends over.
+
+    Chunked prefill is mathematically identical to one-shot
+    :func:`prefill` of the same prompt: chunk c's queries attend all
+    previously ingested KV (read straight from the paged cache) plus
+    the causal prefix of the chunk itself.
+
+    Returns (cache', last_logits [B, V]) — logits at each lane's final
+    live chunk position (``start + chunk_lens - 1``), which is the
+    prompt's last token exactly when the lane's prefill completes this
+    dispatch; the engine samples the first output token from it.
+    """
+    if cfg.n_codebooks != 1:
+        raise NotImplementedError(
+            "prefill_chunk drives single-codebook LMs; multi-codebook "
+            "prefill goes through the one-shot prefill path")
+    h = _embed(params, cfg, tokens, None)                    # [B, C, D]
+
+    def body(h, xs):
+        block_params, block_cache = xs
+        new_caches = []
+        for j, (mixer, ffn_kind) in enumerate(cfg.period):
+            h, new_c, _aux = blocks.block_prefill_chunk(
+                block_params[j], cfg, h, start, chunk_lens,
+                block_cache[j], mixer, ffn_kind, ctx_pages=ctx_pages,
+                impl=impl)
+            new_caches.append(new_c)
+        return h, tuple(new_caches)
+
+    h, new_per_pos = _scan(body, h, (params["blocks"], cache.per_pos))
+    last = jnp.maximum(chunk_lens - 1, 0).astype(jnp.int32)
+    last_h = jnp.take_along_axis(h, last[:, None, None], axis=1)[:, 0]
+    return ModelCache(per_pos=new_per_pos), _logits(params, cfg, last_h)
+
+
+# ---------------------------------------------------------------------------
 # Decode step (the paper's serving loop body)
 # ---------------------------------------------------------------------------
 class StepStats(NamedTuple):
@@ -214,9 +263,13 @@ class StepStats(NamedTuple):
 
 def _decode_core(params: dict, cfg: ModelConfig, token: jnp.ndarray,
                  pos: jnp.ndarray, cache: ModelCache, raas: RaasConfig,
-                 policy: SparsityPolicy, impl: str = "jnp"
+                 policy: SparsityPolicy, impl: str = "jnp",
+                 write_mask: Optional[jnp.ndarray] = None
                  ) -> Tuple[ModelCache, jnp.ndarray, StepStats]:
-    """One decode step through the whole stack, with policy stats."""
+    """One decode step through the whole stack, with policy stats.
+
+    ``write_mask`` [B] bool freezes the caches of masked-off lanes
+    (finished requests / lanes still mid-prefill) bit-exactly."""
     if token.ndim == 1:
         token = token[:, None]
     B = token.shape[0]
@@ -228,7 +281,8 @@ def _decode_core(params: dict, cfg: ModelConfig, token: jnp.ndarray,
         for j, (mixer, ffn_kind) in enumerate(cfg.period):
             h, new_c, stats = blocks.block_decode(
                 block_params[j], cfg, h, pos, block_cache[j], mixer,
-                ffn_kind, raas, impl=impl, policy=policy)
+                ffn_kind, raas, impl=impl, policy=policy,
+                write_mask=write_mask)
             new_caches.append(new_c)
             if stats is not None:
                 stats_list.append(stats)
@@ -308,10 +362,11 @@ def decode_chunk(params: dict, cfg: ModelConfig, cache: ModelCache,
 
       token      [B] i32   feed token (last sampled, or stale if done)
       pos        [B] i32   absolute position of the feed token
-      active     [B] bool  lane is generating (False: cache still
-                           advances — garbage rows are overwritten at
-                           the next admit — but token/pos/outputs are
-                           frozen, matching K sequential single steps)
+      active     [B] bool  lane is generating (False: the lane is
+                           *frozen* — its cache, token, pos and outputs
+                           are all bit-exactly unchanged, so finished
+                           lanes and lanes still mid-prefill ride along
+                           in the batched dispatch unharmed)
       n_emitted  [B] i32   tokens emitted so far (incl. the prefill's
                            first sampled token)
       eos_id     [B] i32   stop token, -1 = none
@@ -331,7 +386,8 @@ def decode_chunk(params: dict, cfg: ModelConfig, cache: ModelCache,
     def one(carry, _):
         cache, token, pos, active, n_emitted = carry
         cache, logits, stats = _decode_core(params, cfg, token, pos,
-                                            cache, raas, policy, impl=impl)
+                                            cache, raas, policy, impl=impl,
+                                            write_mask=active)
         nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)     # [B]
         emitted = active
         inc = emitted.astype(jnp.int32)

@@ -1,4 +1,4 @@
-"""Batched serving engine with slot-based continuous batching.
+"""Batched serving engine: chunked prefill + fused chunked decode.
 
 The paper's deployment story: a decode-dominated engine where each
 sequence's KV cache is a *fixed-size* RaaS-managed region (O(L) per
@@ -7,38 +7,62 @@ of how long any chain-of-thought runs — this is the "significantly
 higher throughput" claim of paper §4.3.
 
 Design:
-  * ``batch_slots`` fixed decode lanes; the scheduler (scheduler.py)
-    assigns queued requests to free lanes.
-  * Prefill runs one request at a time (prompts padded to
-    ``max_prefill``), its cache rows are spliced into the lane.
+  * ``batch_slots`` fixed lanes; each lane is FREE, PREFILL or DECODE.
+    The scheduler (scheduler.py) admits queued requests to free lanes.
+  * **Admission is registration only** — no compute, no host-side cache
+    copy.  A recycled lane is reset *on device* (metadata cleared; the
+    page-length prefix contract makes stale KV bytes dead), and the
+    prompt is then ingested by the chunked-prefill dispatches.
+  * **Prefill is chunked and batched**: one jitted dispatch of
+    ``models.model.prefill_chunk`` feeds up to ``prefill_chunk`` prompt
+    tokens into *every* lane currently in the PREFILL phase, each lane
+    resuming at its own progress (prompts of any length up to
+    ``max_prefill`` — which may be set as high as ``max_seq`` — are
+    ingested exactly; the old engine silently truncated them).
+    Prefill chunks interleave with decode chunks, so admitting a long
+    prompt never stalls lanes that are decoding: their caches are
+    frozen by the decode dispatch's lane mask, bit-exactly.
+  * When a lane's prefill completes, the dispatch's last-position
+    logits yield the first sampled token, and **stopping conditions are
+    honored at admission**: an immediate EOS or ``max_new_tokens <= 1``
+    finishes the request right there — it never occupies a decode lane.
   * The decode hot path is *chunked*: one jitted dispatch of
-    ``models.model.decode_chunk`` advances every active lane by up to
-    ``chunk_steps`` tokens — greedy sampling, EOS / length stopping and
-    position bookkeeping all happen on device, and the host only syncs
-    at chunk boundaries (where the scheduler admits / frees lanes).
-  * Lane KV lives in the page-major kernel-native cache layout
-    (``[B, KV, S, P, hd]``); splicing a prefilled row into a lane and
-    every decode step are in-place page writes — the engine never
-    re-lays-out KV bytes.
+    ``models.model.decode_chunk`` advances every decode-active lane by
+    up to ``chunk_steps`` tokens — greedy sampling, EOS / length
+    stopping and position bookkeeping all happen on device, and the
+    host only syncs at chunk boundaries (where the scheduler admits /
+    frees lanes).  Inactive lanes are frozen in place.
+  * Models with SSM (mamba) mixers, MoE FFNs or multi-codebook heads
+    fall back to a one-shot prefill per admission (SSM chunk-resume
+    state is not carried yet, and MoE expert capacity couples lanes —
+    see the ``chunked_prefill`` gate); everything else behaves
+    identically.
   * All policy semantics dispatch through the resolved
     :class:`SparsityPolicy` object; the engine knows no policy names.
 
-``dispatches`` counts jitted decode dispatches issued (one per chunk);
-``traces`` counts compilations of the chunk function (one per distinct
-chunk length) — the trace-count test asserts chunks hit the jit cache.
+Accounting is honest: ``tokens_emitted`` counts tokens actually
+emitted (from the device-side ``emitted`` mask — a chunk whose lanes
+all finish mid-chunk contributes only the real tokens), and
+``steps_executed`` counts scan steps in which at least one lane was
+live.  ``dispatches`` / ``prefill_dispatches`` count jitted decode /
+prefill dispatches issued; ``traces`` counts compilations of the chunk
+function (the trace-count test asserts chunks hit the jit cache).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional
+from typing import List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.config import ModelConfig, RaasConfig
+from repro.config import ModelConfig, RaasConfig, ServeConfig
+from repro.core import paged_cache as pc
 from repro.core.policy_base import get_policy
 from repro.models import model as M
+
+FREE, PREFILL, DECODE = 0, 1, 2
 
 
 @dataclasses.dataclass
@@ -54,42 +78,106 @@ class Request:
 
 class Engine:
     def __init__(self, params, cfg: ModelConfig, raas: RaasConfig,
-                 batch_slots: int = 4, max_seq: int = 1024,
-                 max_prefill: int = 128, impl: str = "jnp",
-                 param_dtype=jnp.float32, chunk_steps: int = 8):
+                 serve: Optional[ServeConfig] = None, *,
+                 batch_slots: Optional[int] = None,
+                 max_seq: Optional[int] = None,
+                 max_prefill: Optional[int] = None, impl: str = "jnp",
+                 param_dtype=jnp.float32,
+                 chunk_steps: Optional[int] = None,
+                 prefill_chunk: Optional[int] = None):
+        geometry = (batch_slots, max_seq, max_prefill, chunk_steps,
+                    prefill_chunk)
+        if serve is None:
+            batch_slots = 4 if batch_slots is None else batch_slots
+            max_seq = 1024 if max_seq is None else max_seq
+            max_prefill = 128 if max_prefill is None else max_prefill
+            serve = ServeConfig(
+                batch_slots=batch_slots, max_seq=max_seq,
+                max_prefill=max_prefill,
+                chunk_steps=8 if chunk_steps is None else chunk_steps,
+                prefill_chunk=(min(64, max_prefill) if prefill_chunk is None
+                               else prefill_chunk))
+        elif any(g is not None for g in geometry):
+            raise ValueError(
+                "pass either a ServeConfig or the individual geometry "
+                "kwargs, not both — mixed styles would silently ignore "
+                "the kwargs")
         self.policy = get_policy(raas.policy)
-        raas = self.policy.finalize_config(raas, max_prefill)
+        raas = self.policy.finalize_config(raas, serve.max_prefill)
         self.params = params
         self.cfg = cfg
         self.raas = raas
-        self.B = batch_slots
-        self.max_seq = max_seq
-        self.max_prefill = max_prefill
+        self.serve_cfg = serve
+        self.B = serve.batch_slots
+        self.max_seq = serve.max_seq
+        self.max_prefill = serve.max_prefill
         self.impl = impl
-        self.chunk_steps = chunk_steps
+        self.chunk_steps = serve.chunk_steps
+        # non-final chunks must stay page-aligned: round up to a page
+        self.prefill_chunk = -(-serve.prefill_chunk // raas.page_size) \
+            * raas.page_size
+        # prefill slots are contiguous from slot 0; this static bound is
+        # the region a chunked-prefill dispatch attends over.
+        self.prefill_pages = -(-serve.max_prefill // raas.page_size)
+        # One-shot fallback when chunk-resume can't be lane-exact:
+        # SSM state / multi-codebook feeds aren't carried across chunks
+        # yet, and MoE expert capacity is assigned over the flattened
+        # batch — rider lanes' garbage tokens would compete with active
+        # lanes for expert slots, so batched chunked prefill would
+        # couple lanes (one-shot prefill runs B=1: no coupling).
+        self.chunked_prefill = (
+            all(m == "attn" and f != "moe" for m, f in cfg.period)
+            and cfg.n_codebooks == 1)
 
-        self.cache = M.init_model_cache(cfg, raas, batch_slots, max_seq,
-                                        prefill_len=max_prefill,
+        B = self.B
+        self.cache = M.init_model_cache(cfg, raas, B, self.max_seq,
+                                        prefill_len=self.max_prefill,
                                         dtype=param_dtype)
-        self._fresh_row = M.init_model_cache(cfg, raas, 1, max_seq,
-                                             prefill_len=max_prefill,
-                                             dtype=param_dtype)
-        self.pos = np.zeros(batch_slots, np.int32)
-        self.slot_req: List[Optional[Request]] = [None] * batch_slots
-        self.last_token = np.zeros(batch_slots, np.int32)
-        self.active = np.zeros(batch_slots, bool)
-        self.n_emitted = np.zeros(batch_slots, np.int32)
-        self.eos_id = np.full(batch_slots, -1, np.int32)
-        self.max_new = np.zeros(batch_slots, np.int32)
-        self.steps_executed = 0     # decode steps (tokens per lane)
-        self.dispatches = 0         # jitted chunk dispatches issued
+        self.pos = np.zeros(B, np.int32)
+        self.phase = np.zeros(B, np.int32)          # FREE/PREFILL/DECODE
+        self.slot_req: List[Optional[Request]] = [None] * B
+        self._pending_reset = np.zeros(B, bool)     # lanes to recycle
+        self.prefill_pos = np.zeros(B, np.int32)    # prompt tokens ingested
+        self.prompt_len = np.zeros(B, np.int32)
+        self.last_token = np.zeros(B, np.int32)
+        self.active = np.zeros(B, bool)             # decode-live lanes
+        self.n_emitted = np.zeros(B, np.int32)
+        self.eos_id = np.full(B, -1, np.int32)
+        self.max_new = np.zeros(B, np.int32)
+        self.steps_executed = 0     # decode scan steps with >=1 live lane
+        self.tokens_emitted = 0     # true emitted tokens (incl. prefill's)
+        self.prefill_tokens = 0     # prompt tokens ingested
+        self.dispatches = 0         # jitted decode-chunk dispatches
+        self.prefill_dispatches = 0  # jitted prefill dispatches
         self.traces = 0             # chunk-fn compilations
 
         raas_cfg, cfg_, impl_, policy = raas, cfg, impl, self.policy
 
         @jax.jit
-        def _prefill(params, cache_row, tokens, length):
-            return M.prefill(params, cfg_, tokens, length, cache_row,
+        def _reset(cache, mask):
+            # leaves are period-stacked [n_periods, B, ...]: align the
+            # lane mask with axis 1, not the leading period axis.
+            return M.ModelCache(per_pos=tuple(
+                bc._replace(
+                    attn=None if bc.attn is None
+                    else pc.reset_lanes(bc.attn, mask),
+                    mamba=None if bc.mamba is None
+                    else jax.tree.map(
+                        lambda x: jnp.where(
+                            mask.reshape((1, -1) + (1,) * (x.ndim - 2)),
+                            jnp.zeros_like(x), x), bc.mamba))
+                for bc in cache.per_pos))
+
+        @jax.jit
+        def _prefill_chunk(params, cache, tokens, chunk_lens, start):
+            return M.prefill_chunk(params, cfg_, tokens, chunk_lens,
+                                   start, cache,
+                                   ctx_pages=self.prefill_pages,
+                                   impl=impl_)
+
+        @jax.jit
+        def _prefill_oneshot(params, cache, tokens, lengths):
+            return M.prefill(params, cfg_, tokens, lengths, cache,
                              impl=impl_)
 
         def _chunk(params, cache, token, pos, active, n_emitted,
@@ -101,64 +189,196 @@ class Engine:
                                   max_seq=self.max_seq, impl=impl_,
                                   policy=policy)
 
-        self._prefill_fn = _prefill
+        self._reset_fn = _reset
+        self._prefill_chunk_fn = _prefill_chunk
+        self._prefill_fn = _prefill_oneshot
         self._chunk_fn = jax.jit(_chunk, static_argnames=("steps",))
+        # one-shot fallback path keeps a single device-resident template
+        # row (built once; the jitted prefill never donates it, so it is
+        # reused for every admission — no per-request re-materialization)
+        self._fresh_row = None
+        if not self.chunked_prefill:
+            self._fresh_row = M.init_model_cache(
+                cfg, raas, 1, self.max_seq, prefill_len=self.max_prefill,
+                dtype=param_dtype)
 
     # -- slot management -----------------------------------------------------
     def free_slots(self) -> List[int]:
-        return [i for i, r in enumerate(self.slot_req) if r is None]
+        return [i for i in range(self.B) if self.phase[i] == FREE]
 
     def has_active(self) -> bool:
-        return any(r is not None for r in self.slot_req)
+        return bool((self.phase != FREE).any())
 
-    def _splice_row(self, slot: int, row_cache) -> None:
-        self.cache = jax.tree.map(
-            lambda full, row: full.at[:, slot].set(row[:, 0]),
-            self.cache, row_cache)
+    def has_prefill_pending(self) -> bool:
+        return bool((self.phase == PREFILL).any())
 
     def admit(self, req: Request) -> None:
+        """Register a request on a free lane.  No compute happens here:
+        the prompt is ingested by subsequent :meth:`prefill_step`
+        dispatches (interleaved with decode), so admission never stalls
+        active lanes.  Raises if no lane is free or the prompt exceeds
+        the lane's pinned-prefill capacity (the old engine silently
+        truncated such prompts)."""
         free = self.free_slots()
         if not free:
             raise RuntimeError("no free slot")
+        L = len(req.prompt)
+        if L > self.max_prefill:
+            raise ValueError(
+                f"prompt of {L} tokens exceeds the lane prefill capacity "
+                f"max_prefill={self.max_prefill} (raise max_prefill — up "
+                f"to max_seq={self.max_seq} — to serve longer prompts)")
+        if L < 1:
+            raise ValueError("empty prompt")
         slot = free[0]
-        L = min(len(req.prompt), self.max_prefill)
-        toks = np.zeros((1, self.max_prefill), np.int32)
-        toks[0, :L] = req.prompt[:L]
-        row = jax.tree.map(lambda x: x, self._fresh_row)
-        row_cache, logits = self._prefill_fn(
-            self.params, row, jnp.asarray(toks),
-            jnp.asarray([L], jnp.int32))
-        self._splice_row(slot, row_cache)
-        nxt = int(jnp.argmax(logits[0], axis=-1).reshape(-1)[0])
+        # the on-device lane reset is deferred and batched: all lanes
+        # admitted at this chunk boundary are recycled in ONE dispatch
+        # at the next prefill step.
+        self._pending_reset[slot] = True
         self.slot_req[slot] = req
-        self.pos[slot] = L
-        self.last_token[slot] = nxt
-        self.active[slot] = True
-        self.n_emitted[slot] = 1
+        self.phase[slot] = PREFILL
+        self.prefill_pos[slot] = 0
+        self.prompt_len[slot] = L
+        self.active[slot] = False
         self.eos_id[slot] = -1 if req.eos_id is None else req.eos_id
         self.max_new[slot] = req.max_new_tokens
-        req.output.append(nxt)
 
-    def _finish(self, slot: int) -> None:
+    def _finish(self, slot: int) -> Request:
         req = self.slot_req[slot]
         req.done = True
         self.slot_req[slot] = None
+        self.phase[slot] = FREE
+        self.active[slot] = False
+        return req
+
+    # -- prefill ---------------------------------------------------------------
+    def _start_decode(self, slot: int, nxt: int) -> Optional[Request]:
+        """Record the first sampled token of a completed prefill and
+        honor stopping conditions *at admission*: a request that is
+        already done (immediate EOS / exhausted budget / sequence cap)
+        frees its lane without ever entering decode.  Returns the
+        request if it finished here, else None."""
+        req = self.slot_req[slot]
+        plen = int(self.prompt_len[slot])
+        if req.max_new_tokens < 1:
+            return self._finish(slot)
+        req.output.append(nxt)
+        self.tokens_emitted += 1
+        self.n_emitted[slot] = 1
+        hit_eos = req.eos_id is not None and nxt == req.eos_id
+        if hit_eos or req.max_new_tokens <= 1 or plen >= self.max_seq - 1:
+            return self._finish(slot)
+        self.phase[slot] = DECODE
+        self.active[slot] = True
+        self.last_token[slot] = nxt
+        self.pos[slot] = plen
+        return None
+
+    def prefill_step(self) -> List[Request]:
+        """Ingest one prompt chunk into every lane in the PREFILL phase
+        (one batched jitted dispatch); lanes whose prompt completes
+        switch to decode — or finish immediately if a stopping
+        condition already holds.  Returns the requests finished at
+        admission."""
+        lanes = [i for i in range(self.B) if self.phase[i] == PREFILL]
+        if not lanes:
+            return []
+        if not self.chunked_prefill:
+            # the one-shot splice overwrites every leaf of the lane, so
+            # no reset dispatch is needed on the fallback path
+            self._pending_reset[:] = False
+            return self._prefill_oneshot_step(lanes)
+        if self._pending_reset.any():
+            self.cache = self._reset_fn(
+                self.cache, jnp.asarray(self._pending_reset.copy()))
+            self._pending_reset[:] = False
+        C = self.prefill_chunk
+        toks = np.zeros((self.B, C), np.int32)
+        chunk_lens = np.zeros(self.B, np.int32)
+        for i in lanes:
+            got = int(self.prefill_pos[i])
+            n = min(C, int(self.prompt_len[i]) - got)
+            toks[i, :n] = self.slot_req[i].prompt[got:got + n]
+            chunk_lens[i] = n
+        self.prefill_dispatches += 1
+        self.prefill_tokens += int(chunk_lens.sum())
+        # NB the dispatch gets a defensive copy of every host mirror:
+        # jnp.asarray is zero-copy on CPU, and dispatch is async — an
+        # in-place host write racing a still-running device read is
+        # silent corruption.
+        self.cache, logits = self._prefill_chunk_fn(
+            self.params, self.cache, jnp.asarray(toks),
+            jnp.asarray(chunk_lens), jnp.asarray(self.prefill_pos.copy()))
+        self.prefill_pos += chunk_lens
+        finished: List[Request] = []
+        done_lanes = [i for i in lanes
+                      if self.prefill_pos[i] >= self.prompt_len[i]]
+        if done_lanes:
+            # one batched argmax + one host transfer per dispatch, not
+            # one blocking round-trip per completing lane
+            first = np.asarray(jnp.argmax(logits, axis=-1))     # [B]
+            for i in done_lanes:
+                req = self._start_decode(i, int(first[i]))
+                if req is not None:
+                    finished.append(req)
+        return finished
+
+    def _prefill_oneshot_step(self, lanes: List[int]) -> List[Request]:
+        """Fallback for SSM / multi-codebook models: one-shot prefill
+        into a template row, spliced into the lane."""
+        finished: List[Request] = []
+        for slot in lanes:
+            req = self.slot_req[slot]
+            L = int(self.prompt_len[slot])
+            toks = np.zeros((1, self.max_prefill), np.int32)
+            toks[0, :L] = req.prompt
+            self.prefill_dispatches += 1
+            self.prefill_tokens += L
+            row_cache, logits = self._prefill_fn(
+                self.params, self._fresh_row, jnp.asarray(toks),
+                jnp.asarray([L], jnp.int32))
+            self.cache = jax.tree.map(
+                lambda full, row: full.at[:, slot].set(row[:, 0]),
+                self.cache, row_cache)
+            self.prefill_pos[slot] = L
+            # axis=-1 keeps multi-codebook logits [C, V] sampling a
+            # codebook-0 token id, not a flattened [C*V] index
+            nxt = int(jnp.argmax(logits[0], axis=-1).reshape(-1)[0])
+            req2 = self._start_decode(slot, nxt)
+            if req2 is not None:
+                finished.append(req2)
+        return finished
+
+    def drain_prefill(self) -> List[Request]:
+        """Run prefill dispatches until no lane is mid-prefill (test /
+        sequential-baseline convenience; the continuous-batching loop
+        interleaves single :meth:`prefill_step` calls with decode
+        instead).  Returns the requests finished at admission."""
+        finished: List[Request] = []
+        while self.has_prefill_pending():
+            finished.extend(self.prefill_step())
+        return finished
 
     # -- decode ----------------------------------------------------------------
     def step_chunk(self, steps: Optional[int] = None) -> List[Request]:
-        """Advance every active lane by up to ``steps`` tokens in ONE
-        jitted dispatch; sync host state at the boundary and free
-        finished lanes.  Returns the requests that finished."""
+        """Advance every decode-active lane by up to ``steps`` tokens in
+        ONE jitted dispatch; sync host state at the boundary and free
+        finished lanes.  Lanes mid-prefill (and finished lanes) are
+        frozen by the on-device lane mask.  Returns the requests that
+        finished."""
         steps = self.chunk_steps if steps is None else steps
-        slots = [i for i, r in enumerate(self.slot_req) if r is not None]
+        slots = [i for i in range(self.B) if self.phase[i] == DECODE]
         if not slots:
             return []
         self.dispatches += 1
+        # defensive copies: see prefill_step — host mirrors are mutated
+        # in place by admission while dispatches may still be in flight.
         self.cache, out = self._chunk_fn(
             self.params, self.cache,
-            jnp.asarray(self.last_token), jnp.asarray(self.pos),
-            jnp.asarray(self.active), jnp.asarray(self.n_emitted),
-            jnp.asarray(self.eos_id), jnp.asarray(self.max_new),
+            jnp.asarray(self.last_token.copy()), jnp.asarray(self.pos.copy()),
+            jnp.asarray(self.active.copy()),
+            jnp.asarray(self.n_emitted.copy()),
+            jnp.asarray(self.eos_id.copy()), jnp.asarray(self.max_new.copy()),
             steps=steps)
         toks = np.asarray(out.tokens)          # [K, B]
         emitted = np.asarray(out.emitted)      # [K, B]
@@ -166,7 +386,11 @@ class Engine:
         self.pos = np.asarray(out.pos).astype(np.int32)
         self.n_emitted = np.asarray(out.n_emitted).astype(np.int32)
         self.active = np.asarray(out.active).copy()
-        self.steps_executed += steps
+        # honest accounting: tokens actually emitted, and scan steps in
+        # which at least one lane was still live — a chunk whose lanes
+        # all finish mid-chunk doesn't inflate tokens/sec.
+        self.tokens_emitted += int(emitted.sum())
+        self.steps_executed += int(emitted.any(axis=1).sum())
         finished: List[Request] = []
         for slot in slots:
             req = self.slot_req[slot]
@@ -174,8 +398,7 @@ class Engine:
                 if emitted[k, slot]:
                     req.output.append(int(toks[k, slot]))
             if not self.active[slot]:
-                self._finish(slot)
-                finished.append(req)
+                finished.append(self._finish(slot))
         return finished
 
     def step(self) -> List[Request]:

@@ -1,18 +1,32 @@
-"""FIFO request scheduler over the engine's decode lanes.
+"""Continuous-batching loop over the engine's lanes.
 
-Continuous batching at chunk granularity: whenever a lane frees up and
-the queue is non-empty, the next request is prefilled and admitted;
-then one fused dispatch (``Engine.step_chunk``) advances every active
-lane by up to ``chunk_steps`` tokens.  Admission and freeing happen
-only at chunk boundaries — between dispatches the device never syncs
-to host.  This is the standard vLLM/SGLang-style loop reduced to its
-essentials — the paper's contribution (bounded per-lane KV memory) is
-what makes ``batch_slots`` scale with HBM instead of with the longest
-chain-of-thought.
+vLLM-style chunked-prefill serving reduced to its essentials: each
+iteration of the loop is one *chunk boundary* —
 
-Completion tracking is O(1) per finished request: ``step_chunk``
-returns the requests it finished (each exactly once — a finished lane
-is freed before it can finish again).
+  1. **FIFO admission**: free lanes are filled from the queue
+     (registration only; no prefill compute, so admission is O(1) and
+     never blocks lanes that are decoding);
+  2. **one batched prefill-chunk dispatch** feeds the next
+     ``prefill_chunk`` prompt tokens into every lane still ingesting
+     its prompt, each at its own progress — lanes whose prompt
+     completes sample their first token and either start decoding or
+     finish right there (stopping conditions honored at admission);
+  3. **one fused decode dispatch** advances every decode-active lane by
+     up to ``chunk_steps`` tokens; finished lanes are drained and freed.
+
+Prefill and decode thus interleave chunk-for-chunk: a long prompt costs
+each decoding lane at most one prefill dispatch of latency per
+``chunk_steps`` tokens, instead of stalling the whole engine for the
+prompt's full length.  The paper's contribution (bounded per-lane KV
+memory) is what makes ``batch_slots`` scale with HBM instead of with
+the longest chain-of-thought.
+
+Completion tracking is O(1) per finished request: both dispatch kinds
+return the requests they finished (each exactly once — a finished lane
+is freed before it can finish again).  ``max_steps`` bounds *decode
+scan steps issued*; there is no heuristic step-bound fudge — every loop
+iteration provably makes progress (admission, prefill tokens, or decode
+steps), so the loop terminates without one.
 """
 from __future__ import annotations
 
@@ -26,15 +40,21 @@ def serve(engine: Engine, requests: Iterable[Request],
           max_steps: int = 100_000,
           chunk_steps: Optional[int] = None) -> List[Request]:
     """Run ``requests`` to completion.  ``max_steps`` bounds the total
-    number of decode steps (tokens per lane); ``chunk_steps`` overrides
-    the engine's chunk length."""
+    number of decode scan steps issued; ``chunk_steps`` overrides the
+    engine's decode chunk length."""
     queue = deque(requests)
     done: List[Request] = []
-    steps = 0
-    while (queue or engine.has_active()) and steps < max_steps:
+    steps_issued = 0
+    chunk = engine.chunk_steps if chunk_steps is None else chunk_steps
+    if chunk < 1:
+        raise ValueError("chunk_steps must be positive")
+    while queue or engine.has_active():
         while queue and engine.free_slots():
             engine.admit(queue.popleft())
-        before = engine.steps_executed
+        done.extend(engine.prefill_step())
+        if steps_issued >= max_steps:
+            break
+        d0 = engine.dispatches
         done.extend(engine.step_chunk(chunk_steps))
-        steps += max(engine.steps_executed - before, 1)
+        steps_issued += (engine.dispatches - d0) * chunk
     return done

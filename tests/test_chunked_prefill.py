@@ -1,0 +1,318 @@
+"""Chunked-prefill continuous batching tests.
+
+Covers the acceptance criteria of the chunked-prefill refactor:
+  * multi-chunk cache ingest is bit-identical to one-shot ingest,
+  * ``prefill_chunk`` x N is bit-identical to one-shot ``prefill``
+    (same last logits, same cache bytes),
+  * the flash kernel's per-lane chunk-resume mask (array q_offset /
+    kv_len) matches the jnp oracle,
+  * prompts longer than the per-dispatch chunk — including longer than
+    the old engine's one-shot padding — serve to completion with output
+    identical to the single-request reference path (the old engine
+    silently truncated them),
+  * over-capacity prompts are rejected loudly at admission,
+  * more requests than slots with mixed prompt lengths all complete and
+    match their solo runs,
+  * admission genuinely overlaps decode: a lane keeps emitting while
+    another lane's long prompt is still being ingested, with no effect
+    on its output,
+  * stopping conditions are honored at admission (max_new_tokens=1 and
+    immediate EOS never occupy a decode lane),
+  * serving accounting is honest: emitted-token counts come from the
+    device-side mask, and steps_executed does not count dead tail steps
+    of a chunk.
+"""
+import copy
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import jax
+from repro.config import ModelConfig, RaasConfig
+from repro.core import paged_cache as pc
+from repro.kernels import ops
+from repro.models import model as M
+from repro.serving.engine import Engine, Request
+from repro.serving.scheduler import serve
+
+TINY = ModelConfig(name="tiny", arch_type="dense", n_layers=2, d_model=64,
+                   n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=128,
+                   head_dim=16)
+RAAS = RaasConfig(policy="raas", budget_tokens=64, page_size=4)
+
+
+def _params():
+    return M.init_params(jax.random.PRNGKey(0), TINY)
+
+
+def _engine(params, *, batch_slots=2, max_seq=160, max_prefill=48,
+            prefill_chunk=8, chunk_steps=4, raas=RAAS):
+    return Engine(params, TINY, raas, batch_slots=batch_slots,
+                  max_seq=max_seq, max_prefill=max_prefill,
+                  prefill_chunk=prefill_chunk, chunk_steps=chunk_steps)
+
+
+def _prompt(rng, n):
+    return rng.integers(0, TINY.vocab_size, size=n).astype(np.int32)
+
+
+def _solo_reference(params, prompt, max_new, *, max_seq=160,
+                    max_prefill=48, eos_id=None):
+    """The unbatched single-request path: one-shot ``M.prefill`` padded
+    to the lane capacity, then ``decode_step`` per token with host-side
+    argmax — the pre-engine reference loop."""
+    cache = M.init_model_cache(TINY, RAAS, 1, max_seq,
+                               prefill_len=max_prefill)
+    padded = np.zeros((1, max_prefill), np.int32)
+    padded[0, :len(prompt)] = prompt
+    cache, logits = M.prefill(params, TINY, jnp.asarray(padded),
+                              jnp.asarray([len(prompt)], jnp.int32), cache)
+    out = [int(jnp.argmax(logits[0]))]
+    pos = len(prompt)
+    while len(out) < max_new and out[-1] != eos_id and pos < max_seq - 1:
+        cache, logits = M.decode_step(
+            params, TINY, jnp.asarray([out[-1]], jnp.int32),
+            jnp.asarray([pos], jnp.int32), cache, RAAS)
+        out.append(int(jnp.argmax(logits[0])))
+        pos += 1
+    return out
+
+
+# ---------------------------------------------------------------------------
+# cache / model-level chunk-resume parity
+# ---------------------------------------------------------------------------
+def test_multi_chunk_ingest_matches_oneshot():
+    B, KV, hd, P, S = 2, 2, 8, 4, 16
+    spec = pc.CacheSpec(S, P, KV, hd, jnp.float32)
+    rng = np.random.default_rng(0)
+    k = jnp.asarray(rng.standard_normal((B, 48, KV, hd)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, 48, KV, hd)), jnp.float32)
+    lengths = jnp.asarray([37, 21], jnp.int32)   # ragged, not page-aligned
+
+    one = pc.ingest_prefill(pc.init_cache(spec, B), k[:, :40], v[:, :40],
+                            lengths)
+    chunked = pc.init_cache(spec, B)
+    C = 8                                        # page multiple
+    for c0 in range(0, 48, C):
+        cl = jnp.clip(lengths - c0, 0, C)
+        chunked = pc.ingest_prefill_chunk(chunked, k[:, c0:c0 + C],
+                                          v[:, c0:c0 + C], cl)
+    for f in pc.PagedCache._fields:
+        np.testing.assert_array_equal(np.asarray(getattr(one, f)),
+                                      np.asarray(getattr(chunked, f)),
+                                      err_msg=f)
+
+
+def test_ingest_chunk_zero_length_is_noop():
+    spec = pc.CacheSpec(8, 4, 2, 8, jnp.float32)
+    rng = np.random.default_rng(1)
+    cache = pc.init_cache(spec, 2)
+    k = jnp.asarray(rng.standard_normal((2, 8, 2, 8)), jnp.float32)
+    cache = pc.ingest_prefill_chunk(cache, k, k,
+                                    jnp.asarray([8, 0], jnp.int32))
+    # lane 1 untouched, bit-exactly
+    fresh = pc.init_cache(spec, 2)
+    for f in pc.PagedCache._fields:
+        np.testing.assert_array_equal(np.asarray(getattr(cache, f))[1],
+                                      np.asarray(getattr(fresh, f))[1],
+                                      err_msg=f)
+    assert int(cache.cur_len[0]) == 8 and int(cache.cur_len[1]) == 0
+
+
+def test_flash_prefill_per_lane_chunk_resume_mask():
+    """Array q_offset / kv_len (the chunk-resume mask): Pallas
+    interpret vs the jnp oracle, lanes at different progress."""
+    rng = np.random.default_rng(2)
+    B, Sq, Skv, H, KV, hd = 2, 8, 64, 4, 2, 16
+    q = jnp.asarray(rng.standard_normal((B, Sq, H, hd)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, Skv, KV, hd)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, Skv, KV, hd)), jnp.float32)
+    off = jnp.asarray([0, 24], jnp.int32)
+    lim = jnp.asarray([8, 29], jnp.int32)        # lane 1 mid-prompt, ragged
+    ref = ops.flash_prefill(q, k, v, 0.25, q_offset=off, kv_len=lim,
+                            impl="jnp")
+    got = ops.flash_prefill(q, k, v, 0.25, q_offset=off, kv_len=lim,
+                            impl="pallas_interpret", block_q=8, block_k=16)
+    # only live query rows are meaningful (lane 1's rows past its chunk
+    # attend nothing)
+    live = np.asarray(off[:, None] + jnp.arange(Sq)[None] < lim[:, None])
+    err = jnp.abs(jnp.where(jnp.asarray(live)[..., None, None],
+                            ref - got, 0.0)).max()
+    assert float(err) < 2e-5
+
+
+def test_prefill_chunk_matches_oneshot_prefill():
+    params = _params()
+    B, max_prefill, max_seq, C = 2, 40, 96, 8
+    rng = np.random.default_rng(3)
+    toks = jnp.asarray(rng.integers(0, 128, (B, max_prefill)), jnp.int32)
+    plens = jnp.asarray([37, 21], jnp.int32)
+
+    cache0 = M.init_model_cache(TINY, RAAS, B, max_seq,
+                                prefill_len=max_prefill)
+    ref_cache, ref_logits = M.prefill(params, TINY, toks, plens, cache0)
+
+    ctx_pages = -(-max_prefill // RAAS.page_size)
+    cache = M.init_model_cache(TINY, RAAS, B, max_seq,
+                               prefill_len=max_prefill)
+    logits = None
+    for c0 in range(0, max_prefill, C):
+        cl = jnp.clip(plens - c0, 0, C)
+        start = jnp.minimum(jnp.full((B,), c0, jnp.int32), plens)
+        cache, lg = M.prefill_chunk(params, TINY, toks[:, c0:c0 + C], cl,
+                                    start, cache, ctx_pages=ctx_pages)
+        done_now = (c0 < plens) & (plens <= c0 + C)
+        logits = lg if logits is None else jnp.where(done_now[:, None],
+                                                     lg, logits)
+    np.testing.assert_array_equal(np.asarray(logits), np.asarray(ref_logits))
+    for pp_ref, pp_c in zip(ref_cache.per_pos, cache.per_pos):
+        for f in pc.PagedCache._fields:
+            np.testing.assert_array_equal(
+                np.asarray(getattr(pp_ref.attn, f)),
+                np.asarray(getattr(pp_c.attn, f)), err_msg=f)
+
+
+# ---------------------------------------------------------------------------
+# serving: long prompts, capacity, mixed workloads
+# ---------------------------------------------------------------------------
+def test_long_prompt_serves_and_matches_reference():
+    """A 40-token prompt through 8-token prefill chunks: the old engine
+    would have truncated anything beyond its one-shot pad; now it must
+    serve to completion with output identical to the unbatched
+    single-request reference path."""
+    params = _params()
+    rng = np.random.default_rng(4)
+    prompt = _prompt(rng, 40)
+    ref = _solo_reference(params, prompt, max_new=12)
+
+    eng = _engine(params, prefill_chunk=8)
+    req = Request(uid=0, prompt=prompt, max_new_tokens=12)
+    done = serve(eng, [req])
+    assert len(done) == 1 and req.done
+    assert req.output == ref
+    # the prompt really went in chunk-by-chunk
+    assert eng.prefill_dispatches == 5
+    assert eng.prefill_tokens == 40
+
+
+def test_overlong_prompt_rejected_not_truncated():
+    """Regression: prompts beyond the lane capacity used to be silently
+    truncated to ``max_prefill`` tokens; now they are refused loudly."""
+    params = _params()
+    eng = _engine(params, max_prefill=16)
+    rng = np.random.default_rng(5)
+    with pytest.raises(ValueError, match="exceeds the lane prefill"):
+        eng.admit(Request(uid=0, prompt=_prompt(rng, 17), max_new_tokens=4))
+    # the lane is still free and the engine still serves
+    ok = Request(uid=1, prompt=_prompt(rng, 16), max_new_tokens=4)
+    done = serve(eng, [ok])
+    assert len(done) == 1 and len(ok.output) == 4
+
+
+def test_mixed_lengths_more_requests_than_slots():
+    params = _params()
+    rng = np.random.default_rng(6)
+    lens = [3, 10, 17, 33, 40, 5]          # spans < chunk .. many chunks
+    prompts = [_prompt(rng, n) for n in lens]
+    reqs = [Request(uid=i, prompt=p, max_new_tokens=8)
+            for i, p in enumerate(prompts)]
+
+    eng = _engine(params, batch_slots=2, prefill_chunk=16)
+    done = serve(eng, copy.deepcopy(reqs))
+    assert sorted(r.uid for r in done) == list(range(6))
+    by_uid = {r.uid: r for r in done}
+    for i, p in enumerate(prompts):
+        solo = _solo_reference(params, p, max_new=8)
+        assert by_uid[i].output == solo, f"uid {i} (prompt len {lens[i]})"
+
+
+def test_admission_overlaps_active_decode():
+    """While a long prompt is being ingested chunk-by-chunk, an already
+    decoding lane keeps emitting tokens — and its output is unchanged
+    by the interleaved prefill traffic."""
+    params = _params()
+    rng = np.random.default_rng(7)
+    a_prompt, b_prompt = _prompt(rng, 8), _prompt(rng, 40)
+    solo_a = _solo_reference(params, a_prompt, max_new=20)
+    solo_b = _solo_reference(params, b_prompt, max_new=8)
+
+    eng = _engine(params, prefill_chunk=8, chunk_steps=2)
+    a = Request(uid=0, prompt=a_prompt, max_new_tokens=20)
+    b = Request(uid=1, prompt=b_prompt, max_new_tokens=8)
+    eng.admit(a)
+    eng.drain_prefill()                      # A decoding
+    eng.admit(b)                             # B starts its 5-chunk ingest
+    emitted_during_b_prefill = 0
+    while eng.has_prefill_pending():
+        n0 = len(a.output)
+        eng.prefill_step()
+        eng.step_chunk()                     # A advances mid-ingest
+        emitted_during_b_prefill += len(a.output) - n0
+    assert emitted_during_b_prefill > 0, \
+        "decode stalled while a prompt was being ingested"
+    while eng.has_active():
+        eng.step_chunk()
+    assert a.output == solo_a
+    assert b.output == solo_b
+
+
+# ---------------------------------------------------------------------------
+# stopping conditions at admission
+# ---------------------------------------------------------------------------
+def test_max_new_tokens_one_never_occupies_a_decode_lane():
+    params = _params()
+    eng = _engine(params)
+    rng = np.random.default_rng(8)
+    req = Request(uid=0, prompt=_prompt(rng, 8), max_new_tokens=1)
+    done = serve(eng, [req])
+    assert len(done) == 1 and req.done
+    assert len(req.output) == 1
+    assert eng.dispatches == 0               # never entered decode
+    assert not eng.has_active()
+
+
+def test_immediate_eos_finishes_at_admission():
+    params = _params()
+    rng = np.random.default_rng(9)
+    prompt = _prompt(rng, 8)
+    # probe the greedy first token, then declare it the EOS id
+    probe = Request(uid=0, prompt=prompt, max_new_tokens=1)
+    serve(_engine(params), [probe])
+    eos = probe.output[0]
+    eng = _engine(params)
+    req = Request(uid=1, prompt=prompt, max_new_tokens=50, eos_id=eos)
+    done = serve(eng, [req])
+    assert len(done) == 1
+    assert req.output == [eos]
+    assert eng.dispatches == 0
+
+
+# ---------------------------------------------------------------------------
+# honest accounting
+# ---------------------------------------------------------------------------
+def test_emitted_token_accounting_is_true_counts():
+    params = _params()
+    rng = np.random.default_rng(10)
+    reqs = [Request(uid=i, prompt=_prompt(rng, 8 + 4 * i),
+                    max_new_tokens=3 + 2 * i) for i in range(4)]
+    eng = _engine(params, batch_slots=2, prefill_chunk=16, chunk_steps=8)
+    done = serve(eng, copy.deepcopy(reqs))
+    emitted = sum(len(r.output) for r in done)
+    assert eng.tokens_emitted == emitted
+    assert eng.prefill_tokens == sum(8 + 4 * i for i in range(4))
+
+
+def test_steps_executed_not_inflated_by_dead_chunk_tail():
+    """One request, max_new=3, chunk of 8: the dispatch runs 8 scan
+    steps but only 2 do work (tokens 2 and 3; token 1 came from
+    prefill).  The old accounting charged all 8."""
+    params = _params()
+    rng = np.random.default_rng(11)
+    req = Request(uid=0, prompt=_prompt(rng, 8), max_new_tokens=3)
+    eng = _engine(params, chunk_steps=8)
+    serve(eng, [req])
+    assert len(req.output) == 3
+    assert eng.dispatches == 1
+    assert eng.steps_executed == 2
+    assert eng.tokens_emitted == 3

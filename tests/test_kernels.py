@@ -142,8 +142,9 @@ def test_raw_pallas_entries_require_interpret():
                           block_pages=S)
     qf = _rand((B, 8, KV * G, hd), jnp.float32)
     kf = _rand((B, 8, KV, hd), jnp.float32)
+    info = jnp.zeros((2, B), jnp.int32)
     with pytest.raises(TypeError):
-        flash_prefill_pallas(qf.transpose(0, 2, 1, 3),
+        flash_prefill_pallas(info, qf.transpose(0, 2, 1, 3),
                              kf.transpose(0, 2, 1, 3),
                              kf.transpose(0, 2, 1, 3), scale=1.0)
 

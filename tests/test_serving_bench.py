@@ -1,0 +1,31 @@
+"""Serving-throughput benchmark as a test.
+
+The smoke variant runs the full continuous-vs-sequential comparison on
+a tight token budget (few requests, short outputs) so tier-1 stays
+fast; the benchmark's own assertions are the point — true emitted-token
+accounting, byte-identical outputs under batching, and admission
+overlapping decode (strictly fewer dispatches than the sequential
+baseline).  The ``slow`` variant runs the full sweep that also writes
+``BENCH_serving.json`` when invoked through ``benchmarks/run.py``.
+"""
+import pytest
+
+from benchmarks import serving_throughput
+
+
+def test_serving_throughput_smoke():
+    """Tight budget: 5 requests covering sub-chunk and multi-chunk
+    prompts; all the benchmark's honesty assertions run inside."""
+    result = serving_throughput.run(n_requests=5, write_json=False)
+    cont, seq = result["continuous"], result["sequential"]
+    assert cont["dispatches"] < seq["dispatches"]
+    assert cont["tokens_emitted"] == seq["tokens_emitted"] > 0
+    # multi-chunk ingest really happened (128-token prompt, 32/dispatch)
+    assert cont["prefill_dispatches"] > 1
+
+
+@pytest.mark.slow
+def test_serving_throughput_full_sweep():
+    result = serving_throughput.run(n_requests=15, write_json=False)
+    assert result["continuous"]["dispatches"] \
+        < result["sequential"]["dispatches"]

@@ -53,8 +53,10 @@ def test_decode_chunk_k8_matches_eight_single_steps():
     reqs_b = copy.deepcopy(prompts)
     for r in reqs_a:
         eng_a.admit(r)
+    eng_a.drain_prefill()
     for r in reqs_b:
         eng_b.admit(r)
+    eng_b.drain_prefill()
 
     for _ in range(8):
         eng_a.step()
@@ -80,6 +82,7 @@ def test_chunk_one_trace_many_dispatches():
     rng = np.random.default_rng(1)
     for r in _requests(2, rng, max_new=40):
         eng.admit(r)
+    eng.drain_prefill()
     for _ in range(4):
         eng.step_chunk(8)
     assert eng.dispatches == 4
@@ -110,6 +113,7 @@ def test_chunk_stats_stacked_per_step():
     rng = np.random.default_rng(3)
     for r in _requests(2, rng, max_new=20):
         eng.admit(r)
+    eng.drain_prefill()
     _, out = eng._chunk_fn(
         eng.params, eng.cache, jnp.asarray(eng.last_token),
         jnp.asarray(eng.pos), jnp.asarray(eng.active),
