@@ -275,6 +275,16 @@ class ServeConfig:
     with decode chunks, so admitting a long prompt never stalls active
     decode lanes.  It is rounded up to a page multiple by the engine so
     every non-final chunk of a prompt stays page-aligned.
+
+    ``mesh`` is the serving mesh spec ("" = single-device; "data=4" /
+    "data=2,model=2" = sharded).  The engine shards its lane axis —
+    paged cache, phase/progress tables, token buffers — over the
+    "data" axis and params per the decode rule table over "model"
+    (:mod:`repro.launch.shardings` engine mode).  ``batch_slots`` must
+    be divisible by the data axis size (every device gets a whole
+    number of lanes).  The spec is resolved to a live
+    ``jax.sharding.Mesh`` by :func:`repro.launch.mesh.make_serving_mesh`
+    at engine construction, never at config time.
     """
 
     batch_slots: int = 4
@@ -282,6 +292,7 @@ class ServeConfig:
     max_prefill: int = 128
     prefill_chunk: int = 64
     chunk_steps: int = 8
+    mesh: str = ""
 
     def __post_init__(self) -> None:
         if self.max_prefill > self.max_seq:
@@ -292,6 +303,17 @@ class ServeConfig:
             raise ValueError("chunk_steps must be positive")
         if self.batch_slots < 1:
             raise ValueError("batch_slots must be positive")
+        if self.mesh:
+            # lazy import (jax lives downstream); the parse is pure
+            # string validation — no device is touched at config time.
+            from repro.launch.mesh import parse_mesh_spec
+            axes = dict(parse_mesh_spec(self.mesh))
+            if self.batch_slots % axes["data"]:
+                raise ValueError(
+                    f"batch_slots={self.batch_slots} must be divisible "
+                    f"by the mesh data axis ({axes['data']}, from "
+                    f"mesh={self.mesh!r}) — ragged lane shards would "
+                    "force the partitioner to gather")
 
 
 # ---------------------------------------------------------------------------

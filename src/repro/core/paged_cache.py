@@ -94,6 +94,28 @@ class PagedCache(NamedTuple):
         return self.page_len.sum(axis=1)
 
 
+def cache_nbytes(cache: PagedCache, per_device: bool = False) -> int:
+    """Byte footprint of every array the cache allocates per lane
+    batch — K/V pages, representative keys, and all per-page /
+    per-lane metadata.
+
+    ``per_device=True`` counts ONE device's addressable shard instead,
+    from each leaf's ``Sharding.shard_shape`` — the same answer for a
+    single-device cache (shard == global) and ``global / n_data`` for
+    a lane-sharded cache under a mesh, so callers can assert the
+    sharded engine's O(L * B / n_dev) per-device memory without
+    transferring a byte.
+    """
+    total = 0
+    for x in jax.tree.leaves(cache):
+        shape = x.sharding.shard_shape(x.shape) if per_device else x.shape
+        n = 1
+        for d in shape:
+            n *= d
+        total += n * x.dtype.itemsize
+    return total
+
+
 def init_cache(spec: CacheSpec, batch: int) -> PagedCache:
     S, P, KV, hd = spec.n_slots, spec.page_size, spec.n_kv_heads, spec.head_dim
     z = lambda *shape: jnp.zeros(shape, spec.dtype)

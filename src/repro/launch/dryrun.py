@@ -192,6 +192,10 @@ def should_skip(cfg: ModelConfig, shape_name: str,
 
 def _metrics(compiled) -> Dict[str, float]:
     cost = compiled.cost_analysis()
+    # older jax returned a one-element list of dicts; newer returns the
+    # dict directly — accept both.
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
     coll = hlo_analysis.collective_bytes(compiled.as_text())
     return {
         "flops": float(cost.get("flops", 0.0)),

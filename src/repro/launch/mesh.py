@@ -2,9 +2,14 @@
 
 ``make_production_mesh`` is a FUNCTION (not a module constant) so
 importing this module never touches jax device state — the dry-run
-must set XLA_FLAGS before any jax initialization.
+must set XLA_FLAGS before any jax initialization.  The same rule holds
+for the serving meshes: build them *after* process start-up has had its
+chance to set ``--xla_force_host_platform_device_count`` (tests) or
+select real accelerators (deployment).
 """
 from __future__ import annotations
+
+from typing import Tuple
 
 import jax
 
@@ -21,4 +26,66 @@ def batch_axes(multi_pod: bool):
 
 def make_debug_mesh(data: int = 2, model: int = 2):
     """Small host-device mesh for tests (requires forced host devices)."""
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+def parse_mesh_spec(spec: str) -> Tuple[Tuple[str, int], ...]:
+    """Parse a ``"data=4"`` / ``"data=2,model=2"`` mesh spec string.
+
+    Pure string processing (no jax device access) so configs and CLIs
+    can validate a spec without initializing the backend.  Axis order
+    in the string is mesh axis order; ``data`` must be present (the
+    engine shards lanes over it) and ``model`` is implied with size 1
+    when omitted.
+    """
+    axes: dict = {}
+    for part in spec.split(","):
+        part = part.strip()
+        if not part:
+            continue
+        name, _, size = part.partition("=")
+        name = name.strip()
+        if not name or not size or name in axes:
+            raise ValueError(f"bad mesh spec {spec!r}: expected unique "
+                             "'axis=N' entries, e.g. 'data=4,model=2'")
+        try:
+            axes[name] = int(size)
+        except ValueError:
+            raise ValueError(f"bad mesh spec {spec!r}: size of axis "
+                             f"{name!r} is not an integer") from None
+        if axes[name] < 1:
+            raise ValueError(f"bad mesh spec {spec!r}: axis sizes must "
+                             "be positive")
+    if "data" not in axes:
+        raise ValueError(f"mesh spec {spec!r} has no 'data' axis — the "
+                         "serving engine shards lanes over 'data'")
+    axes.setdefault("model", 1)
+    return tuple(axes.items())
+
+
+def make_serving_mesh(spec: str = "", *, data: int = 0, model: int = 1):
+    """Mesh for the sharded serving engine.
+
+    Either parse ``spec`` ("data=4" / "data=2,model=2") or take explicit
+    axis sizes.  Raises with a hint about forced host devices when the
+    process does not expose enough devices — the mesh itself is always
+    ("data", "model")-shaped so :mod:`repro.launch.shardings` engine
+    rules apply verbatim.
+    """
+    if spec:
+        axes = dict(parse_mesh_spec(spec))
+        data, model = axes.pop("data"), axes.pop("model")
+        if axes:
+            raise ValueError(f"serving mesh supports axes data/model, "
+                             f"got extra {sorted(axes)} in {spec!r}")
+    if data < 1:
+        raise ValueError("serving mesh needs data >= 1 (pass spec or data=)")
+    n_need = data * model
+    n_have = jax.device_count()
+    if n_need > n_have:
+        raise ValueError(
+            f"serving mesh data={data},model={model} needs {n_need} "
+            f"devices but only {n_have} are visible (on CPU, set "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={n_need} "
+            "before jax initializes)")
     return jax.make_mesh((data, model), ("data", "model"))

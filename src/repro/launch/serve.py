@@ -34,6 +34,12 @@ def main(argv=None) -> None:
     p.add_argument("--max-new", type=int, default=96)
     p.add_argument("--prefill-chunk", type=int, default=16,
                    help="prompt tokens ingested per prefill dispatch")
+    p.add_argument("--mesh", default="",
+                   help="serving mesh spec, e.g. 'data=4' or "
+                        "'data=2,model=2': shards engine lanes (paged "
+                        "cache, token buffers) over 'data' and params "
+                        "over 'model'; on CPU set XLA_FLAGS="
+                        "--xla_force_host_platform_device_count=N first")
     p.add_argument("--ckpt", default="",
                    help="optional params checkpoint (msgpack)")
     args = p.parse_args(argv)
@@ -53,7 +59,8 @@ def main(argv=None) -> None:
                       page_size=16)
     serve_cfg = ServeConfig(batch_slots=args.slots,
                             max_seq=args.max_new + 64, max_prefill=32,
-                            prefill_chunk=args.prefill_chunk)
+                            prefill_chunk=args.prefill_chunk,
+                            mesh=args.mesh)
     eng = Engine(params, cfg, raas, serve_cfg)
     sp = specials(dc)
     reqs = []
@@ -69,12 +76,15 @@ def main(argv=None) -> None:
                                  np.asarray(r.output)) for r in done])
     # throughput from the engine's true emitted-token count (device-side
     # mask), not dispatches x chunk length
+    mesh_note = f" mesh={args.mesh}" if args.mesh else ""
     print(f"policy={args.policy} budget={args.budget} "
           f"requests={len(done)} JCT={jct:.2f}s "
           f"throughput={eng.tokens_emitted/jct:.1f} tok/s "
           f"accuracy={acc:.2f} "
           f"kv_bytes={eng.kv_cache_bytes()/1e6:.1f}MB "
-          f"dispatches={eng.dispatches}+{eng.prefill_dispatches}pf")
+          f"kv_bytes_per_device={eng.kv_cache_bytes_per_device()/1e6:.1f}MB "
+          f"dispatches={eng.dispatches}+{eng.prefill_dispatches}pf"
+          f"{mesh_note}")
 
 
 if __name__ == "__main__":

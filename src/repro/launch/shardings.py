@@ -6,7 +6,7 @@ dim), applied by *name suffix* rules over the params pytree.  Block
 parameters carry a leading [n_periods] scan-stack dim which the rules
 skip automatically.
 
-Two modes:
+Three modes:
   * "train"  — attention projections sharded on the *head* dim where
     divisible (column-parallel QKV / row-parallel O), else row-parallel
     on d_model.
@@ -14,6 +14,15 @@ Two modes:
     *head_dim* (hd is a multiple of 16 for every assigned arch, unlike
     head counts), so the decode cache memory splits across the model
     axis without gather traffic on the page dim.
+  * "engine" — the serving engine's mesh mode.  Params shard exactly
+    per the "decode" rule table; what is new is the *engine state*: the
+    lane (batch) axis of the paged cache, the lane phase/progress
+    tables and the decode token buffers all shard across the "data"
+    axis (KV pages are lane-major page-major ``[B, KV, S, P, hd]``, so
+    they shard on axis 0 — axis 1 of the period-stacked cache leaves),
+    keeping per-device KV at O(L * B / n_data) while every dispatch
+    stays a single jitted computation under the mesh
+    (:func:`lane_sharding` / :func:`engine_state_shardings`).
 """
 from __future__ import annotations
 
@@ -28,6 +37,27 @@ from repro.config import ModelConfig
 
 def _divisible(n: int, k: int) -> bool:
     return k > 0 and n % k == 0
+
+
+def _path_str(path) -> str:
+    """'/'-joined key path of a tree leaf.
+
+    Handles every jax key type by field: DictKey (.key), GetAttrKey
+    (.name — NamedTuple fields like the paged cache's ``k_pages``; its
+    ``str()`` is ".k_pages", which used to defeat the name-match rules
+    silently), SequenceKey (.idx).
+    """
+    keys = []
+    for p in path:
+        if hasattr(p, "key"):
+            keys.append(str(p.key))
+        elif hasattr(p, "name"):
+            keys.append(str(p.name))
+        elif hasattr(p, "idx"):
+            keys.append(str(p.idx))
+        else:
+            keys.append(str(p))
+    return "/".join(keys)
 
 
 def _with_fsdp(spec: list, shape: Tuple[int, ...], data_size: int,
@@ -47,6 +77,12 @@ def param_pspec(path: str, shape: Tuple[int, ...], cfg: ModelConfig,
                 mode: str, model_size: int, data_size: int,
                 fsdp: bool = False) -> P:
     """Rule table.  ``path`` is '/'-joined key path of the leaf."""
+    if mode not in ("train", "decode", "engine"):
+        raise ValueError(f"unknown sharding mode {mode!r}")
+    if mode == "engine":
+        # serving under a mesh: params follow the decode rule table —
+        # the engine-specific sharding lives in the *state* rules below.
+        mode = "decode"
     name = path.split("/")[-1]
     # strip scan-stack leading dim for blocks
     stacked = path.startswith("blocks")
@@ -124,15 +160,7 @@ def params_shardings(params, cfg: ModelConfig, mesh: Mesh, mode: str,
     data_size = mesh.shape["data"]
 
     def one(path, leaf):
-        keys = []
-        for p in path:
-            if hasattr(p, "key"):
-                keys.append(str(p.key))
-            elif hasattr(p, "idx"):
-                keys.append(str(p.idx))
-            else:
-                keys.append(str(p))
-        ps = param_pspec("/".join(keys), leaf.shape, cfg, mode,
+        ps = param_pspec(_path_str(path), leaf.shape, cfg, mode,
                          model_size, data_size, fsdp)
         return NamedSharding(mesh, ps)
 
@@ -177,15 +205,7 @@ def cache_shardings(cache, batch: int, mesh: Mesh,
     model_size = mesh.shape["model"]
 
     def one(path, leaf):
-        keys = []
-        for p in path:
-            if hasattr(p, "key"):
-                keys.append(str(p.key))
-            elif hasattr(p, "idx"):
-                keys.append(str(p.idx))
-            else:
-                keys.append(str(p))
-        ps = cache_pspec("/".join(keys), leaf.shape, batch, batch_axes,
+        ps = cache_pspec(_path_str(path), leaf.shape, batch, batch_axes,
                          mesh, model_size)
         return NamedSharding(mesh, ps)
 
@@ -199,3 +219,43 @@ def batch_sharding(mesh: Mesh, batch: int, batch_axes: Tuple[str, ...],
         bsz *= mesh.shape[a]
     spec = [batch_axes if batch % bsz == 0 else None] + [None] * (ndim - 1)
     return NamedSharding(mesh, P(*spec))
+
+
+# ---------------------------------------------------------------------------
+# Engine-state shardings (serving under a mesh)
+# ---------------------------------------------------------------------------
+def lane_pspec(batch: int, data_size: int, ndim: int = 1,
+               lane_axis: int = 0) -> P:
+    """Engine per-lane state: shard the lane axis over "data".
+
+    Covers every flat engine buffer — [B] token / position / phase /
+    progress / budget tables, [B, C] prefill token chunks, [B, V]
+    last-position logits, and the [K, B] per-step outputs of the fused
+    decode chunk (``lane_axis=1``).  Falls back to replicated when the
+    lane count does not divide the data axis.
+    """
+    spec: list = [None] * ndim
+    if _divisible(batch, data_size):
+        spec[lane_axis] = "data"
+    return P(*spec)
+
+
+def lane_sharding(mesh: Mesh, batch: int, ndim: int = 1,
+                  lane_axis: int = 0) -> NamedSharding:
+    """NamedSharding form of :func:`lane_pspec`."""
+    return NamedSharding(
+        mesh, lane_pspec(batch, mesh.shape["data"], ndim, lane_axis))
+
+
+def engine_state_shardings(cache, batch: int, mesh: Mesh):
+    """Shardings for the engine's device-resident cache state.
+
+    The paged cache (and SSM state, for hybrid archs) shards its lane
+    axis over "data" and — where divisible — head_dim / heads over
+    "model", exactly the :func:`cache_pspec` decode rules with the
+    engine's single-host batch axes.  ``cache`` may be a pytree of
+    arrays *or* of ShapeDtypeStructs (``jax.eval_shape`` output), so
+    the engine can jit its cache init with these as ``out_shardings``
+    and never materialize an unsharded cache on one device.
+    """
+    return cache_shardings(cache, batch, mesh, ("data",))

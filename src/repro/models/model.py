@@ -345,6 +345,22 @@ class ChunkResult(NamedTuple):
     stats: StepStats        # leaves [K, B]
 
 
+def chunk_result_sharding(lane, step_lane) -> "ChunkResult":
+    """Sharding pytree matching :class:`ChunkResult`'s structure.
+
+    ``lane`` is the sharding of a flat per-lane buffer ([B]: lane axis
+    0), ``step_lane`` of a per-step-per-lane buffer ([K, B]: lane axis
+    1).  The serving engine passes these as the ``out_shardings`` of
+    its fused decode dispatch so chunk outputs stay lane-sharded on
+    device instead of being re-laid-out by the partitioner.
+    """
+    return ChunkResult(
+        tokens=step_lane, emitted=step_lane, token=lane, pos=lane,
+        active=lane, n_emitted=lane,
+        stats=StepStats(evictions=step_lane, pages_attended=step_lane,
+                        tokens_cached=step_lane))
+
+
 def decode_chunk(params: dict, cfg: ModelConfig, cache: ModelCache,
                  token: jnp.ndarray, pos: jnp.ndarray,
                  active: jnp.ndarray, n_emitted: jnp.ndarray,

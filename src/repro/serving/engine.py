@@ -37,6 +37,19 @@ Design:
     state is not carried yet, and MoE expert capacity couples lanes —
     see the ``chunked_prefill`` gate); everything else behaves
     identically.
+  * **Sharded serving**: pass ``mesh`` (or set ``ServeConfig.mesh``)
+    and every dispatch runs as a jitted computation under the mesh
+    with explicit ``NamedSharding``\\ s — the lane axis of the paged
+    cache (lane-major page-major ``[B, KV, S, P, hd]``: axis 0), the
+    lane phase/progress tables and the decode token buffers shard
+    across the "data" axis, params shard per the decode rule table
+    over "model" (:mod:`repro.launch.shardings` engine mode).  The
+    host-side scheduler is unchanged; host mirrors stay per-lane numpy
+    slices, and no dispatch ever gathers the full cache — per-device
+    paged-cache bytes are O(L * B / n_data), asserted by
+    :meth:`kv_cache_bytes_per_device`.  Outputs are byte-identical to
+    the single-device engine (lane math is elementwise along the lane
+    axis; with model=1 no reduction is reassociated).
   * All policy semantics dispatch through the resolved
     :class:`SparsityPolicy` object; the engine knows no policy names.
 
@@ -84,7 +97,8 @@ class Engine:
                  max_prefill: Optional[int] = None, impl: str = "jnp",
                  param_dtype=jnp.float32,
                  chunk_steps: Optional[int] = None,
-                 prefill_chunk: Optional[int] = None):
+                 prefill_chunk: Optional[int] = None,
+                 mesh=None):
         geometry = (batch_slots, max_seq, max_prefill, chunk_steps,
                     prefill_chunk)
         if serve is None:
@@ -130,9 +144,56 @@ class Engine:
             and cfg.n_codebooks == 1)
 
         B = self.B
-        self.cache = M.init_model_cache(cfg, raas, B, self.max_seq,
-                                        prefill_len=self.max_prefill,
-                                        dtype=param_dtype)
+        if mesh is None and serve.mesh:
+            from repro.launch import mesh as mesh_lib
+            mesh = mesh_lib.make_serving_mesh(serve.mesh)
+        self.mesh = mesh
+        self._lane_shd = self._lane2_shd = self._step_shd = None
+        cache_shd = None
+        if mesh is not None:
+            from repro.launch import shardings as S
+            if not {"data", "model"} <= set(mesh.axis_names):
+                raise ValueError(
+                    f"serving mesh needs 'data' and 'model' axes, got "
+                    f"{mesh.axis_names} (see launch.mesh.make_serving_mesh)")
+            if B % mesh.shape["data"]:
+                raise ValueError(
+                    f"batch_slots={B} must be divisible by the mesh data "
+                    f"axis ({mesh.shape['data']}) — ragged lane shards "
+                    "would force the partitioner to gather the cache")
+            if not self.chunked_prefill:
+                raise NotImplementedError(
+                    "sharded serving drives the chunked-prefill path; "
+                    "SSM / MoE / multi-codebook archs still use the "
+                    "one-shot per-lane fallback, which splices a "
+                    "single-device row into the sharded cache — run "
+                    "these without a mesh until chunk-resume lands")
+            # params shard per the decode rule table; engine state —
+            # the paged cache's lane axis and every per-lane buffer —
+            # shards over "data".
+            self.params = jax.device_put(
+                params, S.params_shardings(params, cfg, mesh, "engine"))
+            self._lane_shd = S.lane_sharding(mesh, B, ndim=1)
+            self._lane2_shd = S.lane_sharding(mesh, B, ndim=2)
+            self._step_shd = S.lane_sharding(mesh, B, ndim=2, lane_axis=1)
+            # the cache is *born sharded*: jit its init with explicit
+            # out_shardings so no device ever materializes the full
+            # [B, KV, S, P, hd] page array.
+            cache_like = jax.eval_shape(
+                lambda: M.init_model_cache(cfg, raas, B, self.max_seq,
+                                           prefill_len=self.max_prefill,
+                                           dtype=param_dtype))
+            cache_shd = S.engine_state_shardings(cache_like, B, mesh)
+            self.cache = jax.jit(
+                lambda: M.init_model_cache(cfg, raas, B, self.max_seq,
+                                           prefill_len=self.max_prefill,
+                                           dtype=param_dtype),
+                out_shardings=cache_shd)()
+        else:
+            self.cache = M.init_model_cache(cfg, raas, B, self.max_seq,
+                                            prefill_len=self.max_prefill,
+                                            dtype=param_dtype)
+        self._cache_shd = cache_shd
         self.pos = np.zeros(B, np.int32)
         self.phase = np.zeros(B, np.int32)          # FREE/PREFILL/DECODE
         self.slot_req: List[Optional[Request]] = [None] * B
@@ -153,7 +214,16 @@ class Engine:
 
         raas_cfg, cfg_, impl_, policy = raas, cfg, impl, self.policy
 
-        @jax.jit
+        # explicit NamedShardings on every dispatch under a mesh: the
+        # cache stays lane-sharded across calls (never re-laid-out by
+        # the partitioner, never gathered), and chunk outputs come back
+        # lane-sharded so the host only ever transfers the small [K, B]
+        # token/emitted arrays.
+        def _out(*shd):
+            if mesh is None:
+                return {}
+            return {"out_shardings": shd[0] if len(shd) == 1 else shd}
+
         def _reset(cache, mask):
             # leaves are period-stacked [n_periods, B, ...]: align the
             # lane mask with axis 1, not the leading period axis.
@@ -168,7 +238,6 @@ class Engine:
                             jnp.zeros_like(x), x), bc.mamba))
                 for bc in cache.per_pos))
 
-        @jax.jit
         def _prefill_chunk(params, cache, tokens, chunk_lens, start):
             return M.prefill_chunk(params, cfg_, tokens, chunk_lens,
                                    start, cache,
@@ -189,10 +258,16 @@ class Engine:
                                   max_seq=self.max_seq, impl=impl_,
                                   policy=policy)
 
-        self._reset_fn = _reset
-        self._prefill_chunk_fn = _prefill_chunk
+        self._reset_fn = jax.jit(_reset, **_out(cache_shd))
+        self._prefill_chunk_fn = jax.jit(
+            _prefill_chunk, **_out(cache_shd, self._lane2_shd
+                                   if mesh is not None else None))
         self._prefill_fn = _prefill_oneshot
-        self._chunk_fn = jax.jit(_chunk, static_argnames=("steps",))
+        self._chunk_fn = jax.jit(
+            _chunk, static_argnames=("steps",),
+            **_out(cache_shd,
+                   M.chunk_result_sharding(self._lane_shd, self._step_shd)
+                   if mesh is not None else None))
         # one-shot fallback path keeps a single device-resident template
         # row (built once; the jitted prefill never donates it, so it is
         # reused for every admission — no per-request re-materialization)
@@ -201,6 +276,22 @@ class Engine:
             self._fresh_row = M.init_model_cache(
                 cfg, raas, 1, self.max_seq, prefill_len=self.max_prefill,
                 dtype=param_dtype)
+
+    # -- host <-> device -----------------------------------------------------
+    def _dev(self, arr) -> jnp.ndarray:
+        """One host mirror -> one committed device buffer for a dispatch.
+
+        Always copies (dispatch is async; an in-place host write racing
+        a still-running device read is silent corruption — caught by
+        the parity tests), and under a mesh commits the buffer to its
+        lane sharding so the jitted computation consumes it shard-local
+        — no dispatch ever gathers engine state.
+        """
+        arr = np.asarray(arr).copy()
+        if self.mesh is None:
+            return jnp.asarray(arr)
+        return jax.device_put(
+            arr, self._lane_shd if arr.ndim == 1 else self._lane2_shd)
 
     # -- slot management -----------------------------------------------------
     def free_slots(self) -> List[int]:
@@ -290,7 +381,7 @@ class Engine:
             return self._prefill_oneshot_step(lanes)
         if self._pending_reset.any():
             self.cache = self._reset_fn(
-                self.cache, jnp.asarray(self._pending_reset.copy()))
+                self.cache, self._dev(self._pending_reset))
             self._pending_reset[:] = False
         C = self.prefill_chunk
         toks = np.zeros((self.B, C), np.int32)
@@ -302,13 +393,11 @@ class Engine:
             chunk_lens[i] = n
         self.prefill_dispatches += 1
         self.prefill_tokens += int(chunk_lens.sum())
-        # NB the dispatch gets a defensive copy of every host mirror:
-        # jnp.asarray is zero-copy on CPU, and dispatch is async — an
-        # in-place host write racing a still-running device read is
-        # silent corruption.
+        # every host mirror goes through _dev: defensive copy (dispatch
+        # is async) + lane sharding under a mesh.
         self.cache, logits = self._prefill_chunk_fn(
-            self.params, self.cache, jnp.asarray(toks),
-            jnp.asarray(chunk_lens), jnp.asarray(self.prefill_pos.copy()))
+            self.params, self.cache, self._dev(toks),
+            self._dev(chunk_lens), self._dev(self.prefill_pos))
         self.prefill_pos += chunk_lens
         finished: List[Request] = []
         done_lanes = [i for i in lanes
@@ -371,14 +460,13 @@ class Engine:
         if not slots:
             return []
         self.dispatches += 1
-        # defensive copies: see prefill_step — host mirrors are mutated
-        # in place by admission while dispatches may still be in flight.
+        # _dev copies defensively: host mirrors are mutated in place by
+        # admission while dispatches may still be in flight.
         self.cache, out = self._chunk_fn(
             self.params, self.cache,
-            jnp.asarray(self.last_token.copy()), jnp.asarray(self.pos.copy()),
-            jnp.asarray(self.active.copy()),
-            jnp.asarray(self.n_emitted.copy()),
-            jnp.asarray(self.eos_id.copy()), jnp.asarray(self.max_new.copy()),
+            self._dev(self.last_token), self._dev(self.pos),
+            self._dev(self.active), self._dev(self.n_emitted),
+            self._dev(self.eos_id), self._dev(self.max_new),
             steps=steps)
         toks = np.asarray(out.tokens)          # [K, B]
         emitted = np.asarray(out.emitted)      # [K, B]
@@ -406,14 +494,25 @@ class Engine:
         return self.step_chunk(1)
 
     # -- memory accounting (paper Fig. 7) -------------------------------------
+    def _kv_bytes(self, per_device: bool) -> int:
+        return sum(pc.cache_nbytes(pos_cache.attn, per_device)
+                   for pos_cache in self.cache.per_pos
+                   if pos_cache.attn is not None)
+
     def kv_cache_bytes(self) -> int:
         """Real per-engine KV-cache footprint: K/V pages PLUS the
         representative keys (rep_min/rep_max) and the per-page metadata
         arrays (priority / page_pos / page_len / pinned / active_slot /
-        cur_len) — everything the paged cache allocates per lane."""
-        total = 0
-        for pos_cache in self.cache.per_pos:
-            if pos_cache.attn is None:
-                continue
-            total += sum(x.nbytes for x in jax.tree.leaves(pos_cache.attn))
-        return total
+        cur_len) — everything the paged cache allocates per lane.
+        Global bytes: under a mesh this is the sum over all devices."""
+        return self._kv_bytes(per_device=False)
+
+    def kv_cache_bytes_per_device(self) -> int:
+        """Paged-cache bytes resident on ONE device, from the
+        addressable-shard shapes of each leaf's ``NamedSharding`` —
+        no transfer happens.  Equals :meth:`kv_cache_bytes` on a
+        single device and ``kv_cache_bytes / n_data`` under a mesh
+        (the lane axis shards evenly; metadata rides along) — the
+        O(L * B / n_dev) per-device memory claim, asserted by
+        tests/test_sharded_serving.py."""
+        return self._kv_bytes(per_device=True)

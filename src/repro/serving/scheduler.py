@@ -27,6 +27,15 @@ is freed before it can finish again).  ``max_steps`` bounds *decode
 scan steps issued*; there is no heuristic step-bound fudge — every loop
 iteration provably makes progress (admission, prefill tokens, or decode
 steps), so the loop terminates without one.
+
+The loop is mesh-agnostic by construction: it only talks to the engine
+through admission, the two dispatch kinds, and host-side lane mirrors,
+so a lane-sharded engine (``Engine(..., mesh=...)``) serves the exact
+same schedule — and, because lane math is elementwise on the lane
+axis, the exact same output bytes — as the single-device engine.
+Invariants (FIFO admission order, lane capacity never exceeded, exact
+``tokens_emitted`` accounting) are property-tested in
+tests/test_scheduler_property.py.
 """
 from __future__ import annotations
 

@@ -1,0 +1,57 @@
+"""Run multi-device test-case bodies on ANY machine.
+
+Mesh tests used to hide behind ``jax.device_count() < 2`` skips, which
+meant they never ran in single-device CI.  :func:`run_case` executes a
+named case from ``tests/mdev_cases.py``:
+
+  * **in-process** when the running process already exposes enough
+    devices (the multi-device CI leg sets
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=4`` before
+    pytest starts, so jax initializes with 4 host devices);
+  * otherwise **in a subprocess** whose environment forces host
+    devices *before* jax initializes — the only point at which the
+    device count can be chosen.
+
+Either way the case body actually executes; there is no silent skip.
+"""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+
+
+def run_case(name: str, ndev: int = 4, timeout: int = 1200) -> str:
+    """Execute ``mdev_cases.<name>()`` under >= ``ndev`` devices.
+
+    Returns "in-process" or "subprocess" (useful for debugging which
+    path a CI leg exercised).  Raises AssertionError with the child's
+    output on failure.
+    """
+    import jax
+    if jax.device_count() >= ndev:
+        import mdev_cases
+        getattr(mdev_cases, name)()
+        return "in-process"
+    env = os.environ.copy()
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                        + f" --xla_force_host_platform_device_count={ndev}"
+                        ).strip()
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    extra = [str(ROOT / "src"), str(ROOT), str(ROOT / "tests")]
+    if env.get("PYTHONPATH"):
+        extra.append(env["PYTHONPATH"])
+    env["PYTHONPATH"] = os.pathsep.join(extra)
+    proc = subprocess.run(
+        [sys.executable, str(ROOT / "tests" / "mdev_cases.py"), name],
+        cwd=ROOT, env=env, capture_output=True, text=True, timeout=timeout)
+    if proc.returncode != 0:
+        raise AssertionError(
+            f"multi-device case {name!r} failed in forced-{ndev}-device "
+            f"subprocess (exit {proc.returncode})\n"
+            f"--- stdout ---\n{proc.stdout}\n"
+            f"--- stderr ---\n{proc.stderr}")
+    return "subprocess"

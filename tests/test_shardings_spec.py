@@ -1,0 +1,226 @@
+"""Golden-spec tests for the launch/shardings.py rule table.
+
+The rule table decides where every parameter and cache byte of every
+arch lives on the mesh — and until now had zero direct coverage (a
+path-rendering bug could, and did, silently disable whole rules: the
+``GetAttrKey`` regression below).  Three layers of defence:
+
+  * **divisibility sweep** — for every arch config in ``configs/``,
+    every leaf, every mode (train / decode / engine): any dim the rule
+    table assigns to a mesh axis must actually be divisible by that
+    axis size, or the partitioner would pad or gather silently;
+  * **golden snapshots** — exact PartitionSpecs for representative
+    leaves of a dense-attention arch (qwen3-8b), an MoE arch
+    (olmoe-1b-7b) and a hybrid SSM arch (jamba) in each mode, so a
+    rule-table edit that re-lays-out a flagship arch fails loudly;
+  * **regression** — NamedTuple field names (the paged cache's
+    ``k_pages`` etc.) must round-trip through real
+    ``cache_shardings`` / ``params_shardings`` calls: jax renders
+    those paths as ``GetAttrKey`` whose ``str()`` is ".k_pages", which
+    used to defeat every name-match rule silently.
+"""
+from types import SimpleNamespace
+
+import jax
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.config import ARCH_IDS, RaasConfig, get_config
+from repro.launch import shardings as S
+from repro.models import model as M
+
+# pspec-level tests need axis SIZES only, so no real devices: the rule
+# table reads mesh.shape alone.
+FAKE_MESH = SimpleNamespace(shape={"data": 2, "model": 4})
+DATA, MODEL = 2, 4
+MODES = ("train", "decode", "engine")
+
+
+def _param_leaves(cfg):
+    spec = jax.eval_shape(lambda k: M.init_params(k, cfg),
+                          jax.random.PRNGKey(0))
+    return [(S._path_str(path), leaf.shape) for path, leaf
+            in jax.tree_util.tree_flatten_with_path(spec)[0]]
+
+
+def _cache_leaves(cfg, batch=8, max_seq=4096, prefill=1024):
+    raas = RaasConfig(budget_tokens=1024, page_size=16)
+    spec = jax.eval_shape(
+        lambda: M.init_model_cache(cfg, raas, batch, max_seq,
+                                   prefill_len=prefill))
+    return [(S._path_str(path), leaf.shape) for path, leaf
+            in jax.tree_util.tree_flatten_with_path(spec)[0]]
+
+
+def _axis_size(entry) -> int:
+    axes = entry if isinstance(entry, tuple) else (entry,)
+    n = 1
+    for a in axes:
+        n *= {"data": DATA, "model": MODEL}[a]
+    return n
+
+
+def _assert_divisible(path, shape, pspec):
+    assert len(pspec) <= len(shape), (path, shape, pspec)
+    for i, entry in enumerate(pspec):
+        if entry is None:
+            continue
+        size = _axis_size(entry)
+        assert shape[i] % size == 0, (
+            f"{path}: dim {i} of {shape} sharded over {entry!r} "
+            f"(size {size}) does not divide — the partitioner would "
+            "pad or gather")
+
+
+# ---------------------------------------------------------------------------
+# divisibility sweep: every arch, every leaf, every mode
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_param_pspec_divisible_all_modes(arch):
+    cfg = get_config(arch)
+    leaves = _param_leaves(cfg)
+    assert leaves, arch
+    for mode in MODES:
+        for path, shape in leaves:
+            ps = S.param_pspec(path, shape, cfg, mode, MODEL, DATA,
+                               fsdp=(mode == "train"))
+            _assert_divisible(f"{arch}:{mode}:{path}", shape, ps)
+            # block leaves carry a leading [n_periods] scan-stack dim
+            # that must never be sharded
+            if path.startswith("blocks") and len(ps) > 0:
+                assert ps[0] is None, (arch, mode, path, ps)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_cache_pspec_divisible_engine_mode(arch):
+    cfg = get_config(arch)
+    for path, shape in _cache_leaves(cfg):
+        ps = S.cache_pspec(path, shape, 8, ("data",), FAKE_MESH, MODEL)
+        _assert_divisible(f"{arch}:engine:{path}", shape, ps)
+        # period-stack dim (0) is never sharded; the lane dim (1) is
+        # sharded over data exactly when divisible (batch=8, data=2)
+        assert ps[0] is None, (arch, path, ps)
+        if len(shape) >= 2 and shape[1] == 8:
+            assert ps[1] == ("data",), (arch, path, ps)
+
+
+def test_engine_mode_params_follow_decode_rules():
+    """Engine mode is decode's param rule table, verbatim."""
+    for arch in ("qwen3-8b", "olmoe-1b-7b", "jamba-1.5-large-398b"):
+        cfg = get_config(arch)
+        for path, shape in _param_leaves(cfg):
+            assert S.param_pspec(path, shape, cfg, "engine", MODEL, DATA) \
+                == S.param_pspec(path, shape, cfg, "decode", MODEL, DATA), \
+                (arch, path)
+
+
+def test_unknown_mode_rejected():
+    cfg = get_config("qwen3-8b")
+    with pytest.raises(ValueError, match="unknown sharding mode"):
+        S.param_pspec("embed", (1, 64, 64), cfg, "serve", MODEL, DATA)
+
+
+# ---------------------------------------------------------------------------
+# golden snapshots (axis sizes data=2, model=4)
+# ---------------------------------------------------------------------------
+GOLDEN_PARAMS = {
+    # dense attention (qwen3-8b): head-parallel in train,
+    # head_dim-parallel in decode
+    ("qwen3-8b", "train", "blocks/0/attn/wq"): P(None, "data", "model", None),
+    ("qwen3-8b", "decode", "blocks/0/attn/wq"): P(None, None, None, "model"),
+    ("qwen3-8b", "train", "blocks/0/attn/wo"): P(None, "model", None, "data"),
+    ("qwen3-8b", "decode", "blocks/0/attn/wo"): P(None, None, "model", None),
+    ("qwen3-8b", "train", "blocks/0/ffn/w_gate"): P(None, "data", "model"),
+    ("qwen3-8b", "decode", "blocks/0/ffn/w_down"): P(None, "model", None),
+    ("qwen3-8b", "train", "embed"): P(None, "model", "data"),
+    ("qwen3-8b", "decode", "lm_head"): P(None, None, "model"),
+    ("qwen3-8b", "train", "norm_f/scale"): P("data"),
+    ("qwen3-8b", "decode", "norm_f/scale"): P(None),
+    # MoE (olmoe): expert-parallel both modes; FSDP rides the hidden dim
+    ("olmoe-1b-7b", "train", "blocks/0/moe/w_gate"):
+        P(None, "model", None, "data"),
+    ("olmoe-1b-7b", "decode", "blocks/0/moe/w_gate"):
+        P(None, "model", None, None),
+    ("olmoe-1b-7b", "train", "blocks/0/moe/w_down"):
+        P(None, "model", "data", None),
+    ("olmoe-1b-7b", "decode", "blocks/0/moe/router"): P(None, None, "model"),
+    # SSM (mamba2): head/hidden-parallel, mode-independent
+    ("mamba2-780m", "train", "blocks/0/mamba/A_log"): P(None, "model"),
+    ("mamba2-780m", "decode", "blocks/0/mamba/A_log"): P(None, "model"),
+    ("mamba2-780m", "decode", "blocks/0/mamba/conv_x_w"):
+        P(None, None, "model"),
+}
+
+
+def test_param_pspec_golden():
+    leaves = {}
+    for arch in {a for a, _m, _p in GOLDEN_PARAMS}:
+        leaves[arch] = dict(_param_leaves(get_config(arch)))
+    for (arch, mode, path), want in GOLDEN_PARAMS.items():
+        shape = leaves[arch][path]
+        got = S.param_pspec(path, shape, get_config(arch), mode, MODEL,
+                            DATA, fsdp=(mode == "train"))
+        assert got == want, f"{arch}:{mode}:{path}: {got} != {want}"
+
+
+GOLDEN_CACHE = {
+    # paged KV (lane-major page-major [.., B, KV, S, P, hd]): lanes over
+    # data, head_dim over model; metadata lanes-only
+    ("qwen3-8b", "per_pos/0/attn/k_pages"):
+        P(None, ("data",), None, None, None, "model"),
+    ("qwen3-8b", "per_pos/0/attn/rep_min"):
+        P(None, ("data",), None, None, "model"),
+    ("qwen3-8b", "per_pos/0/attn/priority"): P(None, ("data",), None),
+    ("qwen3-8b", "per_pos/0/attn/active_slot"): P(None, ("data",)),
+    # hybrid SSM state: heads over model, lanes over data
+    ("jamba-1.5-large-398b", "per_pos/0/mamba/ssm"):
+        P(None, ("data",), "model", None, None),
+    ("jamba-1.5-large-398b", "per_pos/0/mamba/conv_x"):
+        P(None, ("data",), None, "model"),
+    ("jamba-1.5-large-398b", "per_pos/4/attn/v_pages"):
+        P(None, ("data",), None, None, None, "model"),
+}
+
+
+def test_cache_pspec_golden():
+    leaves = {}
+    for arch in {a for a, _p in GOLDEN_CACHE}:
+        leaves[arch] = dict(_cache_leaves(get_config(arch)))
+    for (arch, path), want in GOLDEN_CACHE.items():
+        shape = leaves[arch][path]
+        got = S.cache_pspec(path, shape, 8, ("data",), FAKE_MESH, MODEL)
+        assert got == want, f"{arch}:{path}: {got} != {want}"
+
+
+# ---------------------------------------------------------------------------
+# lane (engine per-lane buffer) rules
+# ---------------------------------------------------------------------------
+def test_lane_pspec_golden():
+    assert S.lane_pspec(4, 4) == P("data")
+    assert S.lane_pspec(4, 2, ndim=2) == P("data", None)
+    assert S.lane_pspec(8, 4, ndim=2, lane_axis=1) == P(None, "data")
+    # non-divisible lane counts fall back to replicated, never ragged
+    assert S.lane_pspec(3, 2) == P(None)
+
+
+# ---------------------------------------------------------------------------
+# GetAttrKey path-rendering regression, through the REAL entry points
+# ---------------------------------------------------------------------------
+def test_namedtuple_paths_reach_rule_table():
+    """cache_shardings on the real ModelCache tree must resolve
+    NamedTuple field names: with the old ``str(GetAttrKey)`` rendering
+    every cache path ended in ".k_pages" and the head_dim/ssm rules
+    never fired (caches silently lost their model-axis sharding)."""
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    cfg = get_config("qwen3-8b")
+    raas = RaasConfig(budget_tokens=1024, page_size=16)
+    cache_like = jax.eval_shape(
+        lambda: M.init_model_cache(cfg, raas, 2, 256, prefill_len=64))
+    shd = S.engine_state_shardings(cache_like, 2, mesh)
+    flat = {S._path_str(p): s for p, s
+            in jax.tree_util.tree_flatten_with_path(shd)[0]}
+    k_pages = next(v for k, v in flat.items() if k.endswith("k_pages"))
+    assert k_pages.spec[-1] == "model", k_pages.spec
+    assert k_pages.spec[1] == ("data",), k_pages.spec
+    cur_len = next(v for k, v in flat.items() if k.endswith("cur_len"))
+    assert cur_len.spec == P(None, ("data",)), cur_len.spec
