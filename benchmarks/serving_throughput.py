@@ -22,6 +22,16 @@ Workload: prompts spanning well below to several times the per-dispatch
 ``prefill_chunk`` (long prompts genuinely exercise multi-chunk ingest)
 crossed with short and long decode budgets.
 
+A separate **prefill-heavy row** (long prompts, outputs of a token or
+two — the RPC-style re-ingest regime where prefill dominates) reports
+``prefill_bytes_per_token``: the engine's analytic per-prompt-token
+attention traffic (``ops.flash_prefill_cost`` — exact from the kernel
+grid and each dispatch's chunk-resume table), for the zero-copy paged
+kernel actually used and for the pre-paged token-major gather path.
+The row asserts the paged path strictly beats the gather path, and
+that the power-of-two ``ctx_pages`` bucketing held prefill
+compilations at O(log prefill_pages).
+
 ``--mesh data=N`` adds a **sharded row**: the same workload through a
 lane-sharded engine under an N-device mesh (forced host devices on
 CPU).  The row asserts the sharded engine's outputs are byte-identical
@@ -60,6 +70,7 @@ MAX_PREFILL = 128
 PREFILL_CHUNK = 32
 CHUNK_STEPS = 8
 BUDGET = 256
+PAGE_SIZE = 16
 
 
 def _workload(n_requests: int, rng) -> List[Request]:
@@ -76,8 +87,21 @@ def _workload(n_requests: int, rng) -> List[Request]:
     return reqs
 
 
+def _workload_prefill_heavy(n_requests: int, rng) -> List[Request]:
+    """Long prompts, short outputs: prefill dominates end-to-end."""
+    prompt_lens = [96, 128, 64, 112, 80]       # 2x .. 4x prefill_chunk
+    out_lens = [1, 2, 3]
+    return [Request(
+        uid=i,
+        prompt=rng.integers(0, BENCH_MODEL.vocab_size,
+                            size=prompt_lens[i % len(prompt_lens)])
+        .astype(np.int32),
+        max_new_tokens=out_lens[i % len(out_lens)])
+        for i in range(n_requests)]
+
+
 def _engine(params, max_seq: int, mesh=None) -> Engine:
-    raas = policy_cfg("raas", BUDGET, page_size=16)
+    raas = policy_cfg("raas", BUDGET, page_size=PAGE_SIZE)
     return Engine(params, BENCH_MODEL, raas, batch_slots=BATCH_SLOTS,
                   max_seq=max_seq, max_prefill=MAX_PREFILL,
                   prefill_chunk=PREFILL_CHUNK, chunk_steps=CHUNK_STEPS,
@@ -101,6 +125,13 @@ def _run_continuous(params, reqs, max_seq, mesh=None) -> Dict:
         "tok_per_s": eng.tokens_emitted / max(wall, 1e-9),
         "kv_bytes_global": eng.kv_cache_bytes(),
         "kv_bytes_per_device": eng.kv_cache_bytes_per_device(),
+        "prefill_traces": eng.prefill_traces,
+        "prefill_kv_bytes": eng.prefill_kv_bytes,
+        "prefill_kv_bytes_gather": eng.prefill_kv_bytes_gather,
+        "prefill_bytes_per_token":
+            eng.prefill_kv_bytes / max(eng.prefill_tokens, 1),
+        "prefill_bytes_per_token_gather":
+            eng.prefill_kv_bytes_gather / max(eng.prefill_tokens, 1),
         "outputs": {r.uid: list(r.output) for r in done},
     }
 
@@ -152,6 +183,24 @@ def run(n_requests: int = 15, write_json: bool = True,
     import copy
     cont = _run_continuous(params, copy.deepcopy(reqs), max_seq)
     seq = _run_sequential(params, copy.deepcopy(reqs), max_seq)
+
+    # prefill-heavy row: the zero-copy claim, in bytes per prompt token
+    ph_reqs = _workload_prefill_heavy(max(n_requests // 2, 3),
+                                      np.random.default_rng(1))
+    ph = _run_continuous(params, ph_reqs, max_seq)
+    ph["workload"] = [{"uid": r.uid, "prompt_len": int(len(r.prompt)),
+                       "max_new_tokens": r.max_new_tokens}
+                      for r in ph_reqs]
+    # the paged in-place path must strictly beat the token-major gather
+    # path on analytic attention bytes — the whole point of the kernel
+    assert 0 < ph["prefill_kv_bytes"] < ph["prefill_kv_bytes_gather"], ph
+    assert cont["prefill_kv_bytes"] < cont["prefill_kv_bytes_gather"]
+    # power-of-two ctx_pages bucketing: a whole multi-prompt sweep
+    # compiles O(log prefill_pages) prefill variants, not O(chunks)
+    max_buckets = (MAX_PREFILL // PAGE_SIZE).bit_length() + 1
+    assert ph["prefill_traces"] <= max_buckets, \
+        (ph["prefill_traces"], max_buckets)
+
     shard = None
     if mesh_spec:
         shard = _run_sharded(params, copy.deepcopy(reqs), max_seq, mesh_spec)
@@ -160,6 +209,9 @@ def run(n_requests: int = 15, write_json: bool = True,
             "sharded engine altered request outputs"
         assert shard["tokens_emitted"] == cont["tokens_emitted"]
         assert shard["dispatches"] == cont["dispatches"]
+        # same schedule -> same chunk-resume tables -> identical
+        # analytic prefill traffic under the mesh
+        assert shard["prefill_kv_bytes"] == cont["prefill_kv_bytes"]
         # the O(L*B/n_dev) claim: per-device paged-cache bytes shrink by
         # exactly the data-axis size (lane axis shards evenly)
         assert shard["kv_bytes_per_device"] * shard["n_data"] \
@@ -176,7 +228,8 @@ def run(n_requests: int = 15, write_json: bool = True,
     assert cont["dispatches"] < seq["dispatches"], \
         (cont["dispatches"], seq["dispatches"])
 
-    rows = [("continuous", cont), ("sequential", seq)]
+    rows = [("continuous", cont), ("sequential", seq),
+            ("prefill_heavy", ph)]
     if shard is not None:
         rows.append((f"sharded[{shard['mesh']}]", shard))
     for name, r in rows:
@@ -184,6 +237,12 @@ def run(n_requests: int = 15, write_json: bool = True,
               f"tok_per_s={r['tok_per_s']:.1f},"
               f"dispatches={r['dispatches']},"
               f"tokens={r['tokens_emitted']}", flush=True)
+    print(f"serving/prefill-heavy,"
+          f"prefill_bytes_per_token={ph['prefill_bytes_per_token']:.0f},"
+          f"gather={ph['prefill_bytes_per_token_gather']:.0f},"
+          f"saved="
+          f"{1 - ph['prefill_kv_bytes'] / ph['prefill_kv_bytes_gather']:.1%},"
+          f"prefill_traces={ph['prefill_traces']}", flush=True)
     if shard is not None:
         print(f"serving/sharded,kv_per_device="
               f"{shard['kv_bytes_per_device']/1e6:.2f}MB,"
@@ -196,7 +255,7 @@ def run(n_requests: int = 15, write_json: bool = True,
           flush=True)
 
     result = {
-        "schema": "serving/v2-sharded-mesh",
+        "schema": "serving/v3-paged-prefill",
         "model": BENCH_MODEL.name,
         "batch_slots": BATCH_SLOTS,
         "max_prefill": MAX_PREFILL,
@@ -208,6 +267,7 @@ def run(n_requests: int = 15, write_json: bool = True,
                       "max_new_tokens": r.max_new_tokens} for r in reqs],
         "continuous": {k: v for k, v in cont.items() if k != "outputs"},
         "sequential": {k: v for k, v in seq.items() if k != "outputs"},
+        "prefill_heavy": {k: v for k, v in ph.items() if k != "outputs"},
         "throughput_speedup": speedup,
     }
     if shard is not None:
@@ -233,7 +293,8 @@ def run(n_requests: int = 15, write_json: bool = True,
                 prev = None
         if shard is not None:
             if prev is not None:
-                for k in ("continuous", "sequential", "throughput_speedup"):
+                for k in ("continuous", "sequential", "prefill_heavy",
+                          "throughput_speedup"):
                     result[k] = prev[k]
                 print("serving: kept single-device baseline rows from "
                       f"existing {OUT_PATH.name}", flush=True)

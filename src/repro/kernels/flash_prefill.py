@@ -14,8 +14,11 @@ upper-triangle block skip compares against the lane's offset at run
 time instead of a compile-time constant.
 
 Grid (B, H, nQ, nK); the kv axis is sequential (accumulation), blocks
-entirely in a lane's causal future are skipped with @pl.when so no
-FLOPs or VMEM traffic is spent on them.
+entirely in a lane's causal future — or wholly past its live ``kv_len``
+(the ragged dead tail of a chunk-resume batch) — are skipped with
+@pl.when so no FLOPs are spent on them (``block_is_live`` is the single
+predicate, shared with the paged prefill kernel and traceable by
+tests).
 """
 from __future__ import annotations
 
@@ -27,6 +30,19 @@ from jax.experimental import pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
 NEG_INF = -1e30
+
+
+def block_is_live(first_k_pos, last_q_pos, kv_len):
+    """Run-time block-skip predicate shared by the prefill kernels.
+
+    A kv block is computed iff it starts at or before the q block's last
+    position (causal: not wholly in the future) AND before the lane's
+    live kv length (ragged tail: pages past ``kv_len`` hold nothing a
+    live query may attend).  Works on python ints, numpy scalars and
+    traced values alike, so tests can trace a whole grid through it and
+    assert exactly which blocks a dispatch computes.
+    """
+    return (first_k_pos <= last_q_pos) & (first_k_pos < kv_len)
 
 
 def _kernel(scale: float, bQ: int, bK: int,
@@ -45,12 +61,13 @@ def _kernel(scale: float, bQ: int, bK: int,
         l_s[...] = jnp.zeros_like(l_s)
         acc_s[...] = jnp.zeros_like(acc_s)
 
-    # causal block skip: the whole kv block is in the future of the
-    # whole q block (per-lane offset, so this is a run-time predicate).
+    # block skip (run-time, per-lane): the whole kv block is in the
+    # future of the whole q block (causal) OR wholly past the lane's
+    # live kv length (ragged dead tail) — either way zero FLOPs.
     last_q_pos = qi * bQ + (bQ - 1) + q_offset
     first_k_pos = ki * bK
 
-    @pl.when(first_k_pos <= last_q_pos)
+    @pl.when(block_is_live(first_k_pos, last_q_pos, kv_len))
     def _compute():
         q = q_ref[0, 0].astype(jnp.float32)        # [bQ, hd]
         k = k_ref[0, 0].astype(jnp.float32)        # [bK, hd]

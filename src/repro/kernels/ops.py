@@ -9,9 +9,13 @@ Every op takes ``impl``:
 
 DESIGN — the index-table contract
 =================================
-Decode attention consumes the cache **in place**, in its page-major
-storage layout ``[B, KV, S, P, hd]``.  Page selection is an i32 index
-table ``sel_idx [B, nSel]`` (``None`` = identity: attend every slot):
+Both serving attention stages consume the cache **in place**, in its
+page-major storage layout ``[B, KV, S, P, hd]``: decode streams the
+policy-selected pages, and chunked prefill (``paged_flash_prefill``)
+streams the contiguous prefill region page-blocked under the per-lane
+chunk-resume table — neither ever materializes a token-major copy.
+For decode, page selection is an i32 index table ``sel_idx [B, nSel]``
+(``None`` = identity: attend every slot):
 
   * entries are duplicate-free page slots; order is irrelevant
     (softmax runs over the union of their tokens);
@@ -200,3 +204,130 @@ def flash_prefill(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
         jnp.stack([off, lim]), qt, kt, vt, scale=scale,
         block_q=bQ, block_k=bK, interpret=(impl == "pallas_interpret"))
     return out[:, :, :Sq].transpose(0, 2, 1, 3)
+
+
+# ---------------------------------------------------------------------------
+# Paged flash prefill (zero-copy chunk-resume over the page-major cache)
+# ---------------------------------------------------------------------------
+def paged_prefill_geometry(Sq: int, ctx_pages: int, page_size: int,
+                           block_q: int = 256,
+                           block_k: int = 256) -> Tuple[int, int]:
+    """(bQ, pages_per_block) the paged prefill kernel runs with.
+
+    The kv block is a whole number of pages: grown by doubling from one
+    page toward ``block_k`` tokens, while still dividing ``ctx_pages``
+    (with the engine's power-of-two bucketing every value divides
+    evenly; a non-power-of-two ``ctx_pages`` just stops doubling
+    earlier).  Exposed so the analytic cost model and the benchmarks
+    can reproduce the exact grid the kernel will run.
+    """
+    bQ = min(block_q, Sq)
+    ppb = 1
+    while (ppb * 2 * page_size <= block_k
+           and ctx_pages % (ppb * 2) == 0):
+        ppb *= 2
+    return bQ, ppb
+
+
+def paged_flash_prefill(q: jnp.ndarray, k_pages: jnp.ndarray,
+                        v_pages: jnp.ndarray, scale: float,
+                        q_offset, kv_len, *, ctx_pages: int,
+                        impl: str = "jnp", block_q: int = 256,
+                        block_k: int = 256) -> jnp.ndarray:
+    """Chunk-resume causal prefill reading the paged cache **in place**.
+
+    q [B, C, H, hd] (token-major chunk queries, as projected);
+    k/v_pages [B, KV, S, P, hd] — the kernel-native page-major cache
+    storage.  ``q_offset`` [B] i32 (or int) places each lane's chunk at
+    its resume position; ``kv_len`` [B] i32 (or int) is each lane's
+    live kv length (q_offset + live chunk tokens; 0 freezes the lane's
+    rows entirely — ride-along lanes in a batched dispatch cost zero
+    blocks).  ``ctx_pages`` (static) bounds the prefill region: slots
+    [0, ctx_pages), positions [0, ctx_pages * P).
+
+    The Pallas path streams pages straight out of HBM through the
+    BlockSpec index map — no token-major gather exists anywhere in the
+    dispatch.  The jnp oracle gathers the region (inherent to jnp, and
+    exactly what the pre-kernel path did — bit-exact by construction),
+    but the copy is O(ctx_pages), never O(S).  Returns ctx [B,C,H,hd].
+    """
+    if impl in ("jnp", "jnp_naive"):
+        return ref.paged_flash_prefill_ref(q, k_pages, v_pages, scale,
+                                           q_offset, kv_len, ctx_pages)
+    from repro.kernels.paged_flash_prefill import paged_flash_prefill_pallas
+
+    B, Sq, H, hd = q.shape
+    P = k_pages.shape[3]
+    bQ, ppb = paged_prefill_geometry(Sq, ctx_pages, P, block_q, block_k)
+    qt = q.transpose(0, 2, 1, 3)                   # [B, H, Sq, hd]
+    Sqp = _round_up(Sq, bQ)
+    if Sqp != Sq:
+        qt = jnp.pad(qt, ((0, 0), (0, 0), (0, Sqp - Sq), (0, 0)))
+    off = jnp.broadcast_to(jnp.asarray(
+        0 if q_offset is None else q_offset, jnp.int32).reshape(-1), (B,))
+    lim = jnp.broadcast_to(jnp.asarray(
+        ctx_pages * P if kv_len is None else kv_len,
+        jnp.int32).reshape(-1), (B,))
+    out = paged_flash_prefill_pallas(
+        jnp.stack([off, lim]), qt, k_pages, v_pages, scale=scale,
+        ctx_pages=ctx_pages, block_q=bQ, pages_per_block=ppb,
+        interpret=(impl == "pallas_interpret"))
+    return out[:, :, :Sq].transpose(0, 2, 1, 3)
+
+
+def flash_prefill_cost(*, H: int, KV: int, hd: int, Sq: int,
+                       ctx_tokens: int, q_offset, kv_len,
+                       block_q: int = 256, block_kv: int = 256,
+                       itemsize: int = 4) -> dict:
+    """Exact per-dispatch HBM traffic / FLOPs of a prefill-chunk kernel.
+
+    Deterministic from the grid x block specs and the chunk-resume
+    table, for both prefill kernels (they share ``block_is_live`` and
+    the (B, H, nQ, nK) grid): per (lane, head, q-block) the kernel DMAs
+    exactly the causally-live, non-dead-tail kv blocks, each
+    ``block_kv`` tokens of K and V.  FLOPs count live blocks only —
+    ``@pl.when`` really skips dead ones.  A (lane, q-block) sweep with
+    zero live blocks is charged one kv-block fetch: its clamped index
+    map pins every step to block 0, so the pipeline streams it at most
+    once per sweep (and revisit-skips may elide even that — the one
+    deliberately conservative term in an otherwise exact count).
+    ``q_offset``/``kv_len`` are the per-lane chunk-resume entries (ints
+    or arrays); ``ctx_tokens`` is the streamed region (``ctx_pages *
+    P`` for the paged kernel, Skv for the dense one).
+
+    Returns ``flops``, ``bytes_accessed`` (the kernel's own traffic —
+    identical for the paged and the gather-then-dense path), and
+    ``gather_bytes``: the *additional* token-major materialization the
+    pre-paged path paid per dispatch (read K+V pages + write the
+    token-major copy).  ``gather_bytes`` is what going zero-copy saves;
+    the benchmarks assert it strictly positive and report
+    ``bytes_accessed`` vs ``bytes_accessed + gather_bytes``.
+    """
+    off = np.broadcast_to(np.asarray(q_offset, np.int64).reshape(-1), (1,)) \
+        if np.ndim(q_offset) == 0 else np.asarray(q_offset, np.int64)
+    lim = np.broadcast_to(np.asarray(kv_len, np.int64).reshape(-1), (1,)) \
+        if np.ndim(kv_len) == 0 else np.asarray(kv_len, np.int64)
+    off, lim = np.broadcast_arrays(off.reshape(-1), lim.reshape(-1))
+    B = off.shape[0]
+    bQ = min(block_q, Sq)
+    nQ = -(-Sq // bQ)
+    bT = block_kv
+    nK = -(-ctx_tokens // bT)
+    live_blocks = fetched_blocks = 0
+    for o, l in zip(off.tolist(), lim.tolist()):
+        for qi in range(nQ):
+            last_q = qi * bQ + (bQ - 1) + o
+            # blocks with first_k_pos <= last_q AND first_k_pos < l
+            n_live = min(nK, -(-min(last_q + 1, l) // bT))
+            n_live = max(n_live, 0)
+            live_blocks += n_live
+            fetched_blocks += max(n_live, 1)   # dead sweep: block 0 only
+    kv_bytes = fetched_blocks * H * bT * hd * itemsize * 2
+    qo_bytes = 2 * B * H * Sq * hd * itemsize
+    table_bytes = 2 * B * 4
+    gather_bytes = 4 * B * ctx_tokens * KV * hd * itemsize
+    return {
+        "flops": 4 * live_blocks * H * bQ * bT * hd,
+        "bytes_accessed": kv_bytes + qo_bytes + table_bytes,
+        "gather_bytes": gather_bytes,
+    }

@@ -1,0 +1,184 @@
+"""Pallas TPU kernel: zero-copy paged flash prefill (chunk-resume).
+
+Chunked prefill used to pay an O(ctx) tax per dispatch: the wrapper
+transposed + reshaped the prefill region of the page-major cache into a
+token-major copy, per layer, every chunk — exactly the per-step KV
+traffic the zero-copy decode kernel already eliminated.  This kernel
+closes that gap: a blocked online-softmax causal flash kernel whose K/V
+BlockSpec index maps resolve *pages of the kernel-native cache*
+``[B, KV, S, P, hd]`` directly — a kv block is ``pages_per_block``
+consecutive page slots (prefill pages are laid out contiguously from
+slot 0, so slot-space IS position-space for the prefill region), and no
+token-major gather ever materializes.
+
+Chunk-resume semantics are identical to the dense prefill kernel: the
+scalar-prefetched ``seq_info [2, B]`` table (row 0 = per-lane q_offset,
+row 1 = live kv_len) drives the per-lane causal mask and the ragged
+page-tail mask (positions >= kv_len inside a page are dead — the same
+prefix contract every other kernel relies on).
+
+Traffic discipline, mirroring the paged decode kernel:
+  * blocks in a lane's causal future or wholly past its ``kv_len`` are
+    skipped with ``@pl.when`` (``block_is_live`` — the predicate shared
+    with the dense kernel) so dead tail pages cost zero FLOPs;
+  * the K/V index map *clamps* the block index to the lane's last live
+    block, so consecutive dead grid steps revisit the same block and
+    the pipeline skips their DMAs — dead pages cost (almost) zero HBM
+    traffic too, not just zero compute;
+  * the kernel streams only the first ``ctx_pages`` slots.  That bound
+    is a static grid parameter, so the serving engine buckets it to
+    powers of two — O(log S) compiled variants per geometry instead of
+    one per chunk boundary.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+from repro.kernels.flash_prefill import NEG_INF, block_is_live
+
+
+def _kernel(scale: float, bQ: int, bT: int,
+            info_ref,                              # [2, B] SMEM (prefetch)
+            q_ref, k_ref, v_ref, o_ref, m_s, l_s, acc_s):
+    b = pl.program_id(0)
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+    nK = pl.num_programs(3)
+    q_offset = info_ref[0, b]
+    kv_len = info_ref[1, b]
+
+    @pl.when(ki == 0)
+    def _init():
+        m_s[...] = jnp.full_like(m_s, NEG_INF)
+        l_s[...] = jnp.zeros_like(l_s)
+        acc_s[...] = jnp.zeros_like(acc_s)
+
+    last_q_pos = qi * bQ + (bQ - 1) + q_offset
+    first_k_pos = ki * bT
+
+    @pl.when(block_is_live(first_k_pos, last_q_pos, kv_len))
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)             # [bQ, hd]
+        # one or more whole pages: [ppb, P, hd] -> token rows [bT, hd]
+        # (slot-space == position-space for the contiguous prefill
+        # region, so collapsing pages recovers token order for free)
+        hd = q.shape[-1]
+        k = k_ref[0, 0].reshape(bT, hd).astype(jnp.float32)
+        v = v_ref[0, 0].reshape(bT, hd).astype(jnp.float32)
+
+        logits = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale       # [bQ, bT]
+        qpos = qi * bQ + jax.lax.broadcasted_iota(jnp.int32, (bQ, bT), 0) \
+            + q_offset
+        kpos = ki * bT + jax.lax.broadcasted_iota(jnp.int32, (bQ, bT), 1)
+        # causal + ragged page tail: a partial last page's dead suffix
+        # (and anything not yet ingested) sits at positions >= kv_len
+        mask = (qpos >= kpos) & (kpos < kv_len)
+        logits = jnp.where(mask, logits, NEG_INF)
+
+        m_prev = m_s[...]
+        m_new = jnp.maximum(m_prev, logits.max(axis=-1))
+        corr = jnp.exp(m_prev - m_new)
+        p = jnp.where(mask, jnp.exp(logits - m_new[:, None]), 0.0)
+        l_s[...] = l_s[...] * corr + p.sum(axis=-1)
+        acc_s[...] = acc_s[...] * corr[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_s[...] = m_new
+
+    @pl.when(ki == nK - 1)
+    def _fin():
+        denom = jnp.maximum(l_s[...], 1e-30)
+        o_ref[0, 0] = (acc_s[...] / denom[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "ctx_pages",
+                                             "block_q", "pages_per_block",
+                                             "interpret"))
+def paged_flash_prefill_pallas(seq_info: jnp.ndarray, q: jnp.ndarray,
+                               k_pages: jnp.ndarray, v_pages: jnp.ndarray,
+                               *, scale: float, ctx_pages: int,
+                               block_q: int, pages_per_block: int,
+                               interpret: bool) -> jnp.ndarray:
+    """Raw kernel entry.  See ``ops.paged_flash_prefill`` for the API.
+
+    q          [B, H, Sq, hd]     chunk queries (Sq a block_q multiple)
+    k_pages    [B, KV, S, P, hd]  page-major cache storage (in place)
+    v_pages    [B, KV, S, P, hd]
+    seq_info   [2, B] i32         scalar-prefetched chunk-resume table:
+                                  row 0 q_offset, row 1 live kv_len
+
+    ``ctx_pages`` (static) bounds the prefill region streamed: the
+    first ``ctx_pages`` slots, which the contiguous prefill layout
+    makes positions ``[0, ctx_pages * P)``.  ``pages_per_block``
+    (static) is the kv block granularity in whole pages and must divide
+    ``ctx_pages``.  ``interpret`` is mandatory: only ``ops.py`` decides
+    the execution mode.  Returns ctx [B, H, Sq, hd].
+    """
+    B, H, Sq, hd = q.shape
+    KV, S, P = k_pages.shape[1:4]
+    G = H // KV
+    ppb = pages_per_block
+    bT = ppb * P
+    bQ = min(block_q, Sq)
+    assert Sq % bQ == 0
+    assert ctx_pages % ppb == 0 and 0 < ctx_pages <= S
+    assert seq_info.shape == (2, B)
+    nQ, nK = Sq // bQ, ctx_pages // ppb
+
+    def kv_index(b, h, qi, ki, info):
+        # clamp dead blocks (causal future / ragged tail) onto the
+        # lane's last live block: consecutive grid steps then revisit
+        # the same block and the pipeline skips the DMA entirely.
+        last_q_pos = info[0, b] + (qi + 1) * bQ - 1
+        live_end = jnp.minimum(info[1, b] - 1, last_q_pos)      # position
+        lim = jnp.maximum(live_end // bT, 0)                    # block idx
+        return (b, h // G, jnp.minimum(ki, lim), 0, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, H, nQ, nK),
+        in_specs=[
+            pl.BlockSpec((1, 1, bQ, hd),
+                         lambda b, h, qi, ki, info: (b, h, qi, 0)),
+            pl.BlockSpec((1, 1, ppb, P, hd), kv_index),
+            pl.BlockSpec((1, 1, ppb, P, hd), kv_index),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bQ, hd),
+                               lambda b, h, qi, ki, info: (b, h, qi, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((bQ,), jnp.float32),
+            pltpu.VMEM((bQ,), jnp.float32),
+            pltpu.VMEM((bQ, hd), jnp.float32),
+        ],
+    )
+    # advisory cost: the worst case (every block causally live for every
+    # lane).  The exact per-dispatch number — a function of the actual
+    # chunk-resume table — is ops.flash_prefill_cost, which the serving
+    # engine and benchmarks use for the honest bytes accounting.
+    itemsize = jnp.dtype(k_pages.dtype).itemsize
+    kv_bytes = B * H * nQ * nK * bT * hd * itemsize * 2
+    qo_bytes = 2 * B * H * Sq * hd * jnp.dtype(q.dtype).itemsize
+    cost = pl.CostEstimate(
+        flops=4 * B * H * nQ * nK * bQ * bT * hd,
+        bytes_accessed=kv_bytes + qo_bytes,
+        transcendentals=B * H * nQ * nK * bQ * bT,
+    )
+    kernel = functools.partial(_kernel, scale, bQ, bT)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, H, Sq, hd), q.dtype),
+        compiler_params=pltpu.TPUCompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary")),
+        cost_estimate=cost,
+        interpret=interpret,
+        name="raas_paged_flash_prefill",
+    )(seq_info, q, k_pages, v_pages)

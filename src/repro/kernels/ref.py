@@ -138,3 +138,30 @@ def flash_prefill_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
     probs = e / jnp.maximum(e.sum(-1, keepdims=True), 1e-30)
     ctx = jnp.einsum("bkgqs,bskd->bqkgd", probs, v.astype(jnp.float32))
     return ctx.reshape(B, Sq, H, hd).astype(q.dtype)
+
+
+def paged_flash_prefill_ref(q: jnp.ndarray, k_pages: jnp.ndarray,
+                            v_pages: jnp.ndarray, scale: float,
+                            q_offset, kv_len,
+                            ctx_pages: int) -> jnp.ndarray:
+    """Chunk-resume causal prefill over the paged cache's prefill region.
+
+    q [B, C, H, hd] (token-major chunk queries); k/v_pages
+    [B, KV, S, P, hd] page-major cache storage; ``q_offset``/``kv_len``
+    as in :func:`flash_prefill_ref`; ``ctx_pages`` bounds the prefill
+    region attended (slots [0, ctx_pages), i.e. positions
+    [0, ctx_pages * P) — prefill pages are contiguous from slot 0).
+
+    This is the semantic ground truth for the zero-copy paged prefill
+    kernel AND the pre-kernel token-major path, verbatim: gather the
+    region token-major (a copy is inherent to jnp — O(ctx_pages), never
+    O(S)) and run the dense oracle over it.  Bit-exactness against the
+    old ``blocks.block_prefill_chunk`` gather is by construction.
+    """
+    B = q.shape[0]
+    KV, _S, P, hd = k_pages.shape[1:]
+    kc = k_pages[:, :, :ctx_pages].transpose(0, 2, 3, 1, 4) \
+        .reshape(B, ctx_pages * P, KV, hd)
+    vc = v_pages[:, :, :ctx_pages].transpose(0, 2, 3, 1, 4) \
+        .reshape(B, ctx_pages * P, KV, hd)
+    return flash_prefill_ref(q, kc, vc, scale, q_offset, kv_len)

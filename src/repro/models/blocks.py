@@ -144,11 +144,16 @@ def block_prefill_chunk(params: dict, cfg: ModelConfig, h: jnp.ndarray,
     [B] i32 the live tokens of this chunk (0 = lane rides along
     untouched).  ``ctx_pages`` (static) bounds the prefill region of
     the paged cache the chunk attends to: the chunk's keys are ingested
-    first, then attention runs over the first ``ctx_pages`` slots
-    gathered token-major — prefill pages are laid out contiguously from
-    slot 0, so that region IS positions [0, ctx_pages * P) and the
-    per-lane causal mask (q_offset = start) makes the chunk attend to
-    exactly its own past.  Returns (h', cache', aux).
+    first, then attention reads the first ``ctx_pages`` slots of the
+    page-major cache **in place** (``ops.paged_flash_prefill``: the
+    Pallas kernel resolves pages through its BlockSpec index map — no
+    token-major gather; the jnp oracle gathers O(ctx_pages)) — prefill
+    pages are laid out contiguously from slot 0, so that region IS
+    positions [0, ctx_pages * P) and the per-lane causal mask
+    (q_offset = start) makes the chunk attend to exactly its own past.
+    The serving engine buckets ``ctx_pages`` to powers of two, so long-
+    prompt ingest compiles O(log S) variants of this body, not one per
+    chunk boundary.  Returns (h', cache', aux).
     """
     hn = layers.rmsnorm(params["norm_mixer"], h, cfg.norm_eps)
     if mixer != ATTN:
@@ -160,17 +165,14 @@ def block_prefill_chunk(params: dict, cfg: ModelConfig, h: jnp.ndarray,
     positions = start[:, None] + jnp.arange(C, dtype=jnp.int32)[None]
     q, k, v = layers.qkv_project(params["attn"], cfg, hn, positions)
     new_pc = pc.ingest_prefill_chunk(cache.attn, k, v, chunk_lens)
-    P = new_pc.page_size
-    KV, hd = cfg.n_kv_heads, cfg.resolved_head_dim
-    # token-major view of the (contiguous) prefill region, incl. the
-    # chunk just ingested
-    kc = new_pc.k_pages[:, :, :ctx_pages].transpose(0, 2, 3, 1, 4) \
-        .reshape(B, ctx_pages * P, KV, hd)
-    vc = new_pc.v_pages[:, :, :ctx_pages].transpose(0, 2, 3, 1, 4) \
-        .reshape(B, ctx_pages * P, KV, hd)
     scale = 1.0 / (cfg.resolved_head_dim ** 0.5)
-    ctx = ops.flash_prefill(q, kc, vc, scale, q_offset=start,
-                            kv_len=start + chunk_lens, impl=impl)
+    # ride-along lanes (chunk_lens == 0) get kv_len 0: every kv block
+    # of theirs is dead, so the kernel skips them outright instead of
+    # attending a rider's stale context for rows nobody reads.
+    kv_len = jnp.where(chunk_lens > 0, start + chunk_lens, 0)
+    ctx = ops.paged_flash_prefill(q, new_pc.k_pages, new_pc.v_pages,
+                                  scale, start, kv_len,
+                                  ctx_pages=ctx_pages, impl=impl)
     h = h + layers.attn_output(params["attn"], ctx)
     cache = cache._replace(attn=new_pc)
     h, aux = _ffn_step(params, cfg, h, ffn_kind, capacity_factor)

@@ -214,7 +214,12 @@ def prefill_chunk(params: dict, cfg: ModelConfig, tokens: jnp.ndarray,
     along in the batched dispatch); ``start`` [B] each lane's resume
     position (tokens already ingested; page-aligned for live lanes —
     the engine keeps chunks at a page multiple).  ``ctx_pages``
-    (static) is the prefill page capacity the chunk attends over.
+    (static) is the prefill region the chunk attends over, read
+    **in place** from the page-major cache by the paged flash kernel;
+    it must cover every live lane's ``start + chunk_lens`` tokens and
+    is otherwise free — the engine buckets it to powers of two so a
+    long prompt compiles O(log S) variants of this function, not one
+    per chunk boundary.
 
     Chunked prefill is mathematically identical to one-shot
     :func:`prefill` of the same prompt: chunk c's queries attend all

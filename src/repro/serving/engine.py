@@ -70,12 +70,27 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.config import ModelConfig, RaasConfig, ServeConfig
+from repro.config import ATTN, ModelConfig, RaasConfig, ServeConfig
 from repro.core import paged_cache as pc
 from repro.core.policy_base import get_policy
+from repro.kernels import ops
 from repro.models import model as M
 
 FREE, PREFILL, DECODE = 0, 1, 2
+
+
+def _next_pow2(n: int) -> int:
+    return 1 << max(n - 1, 0).bit_length()
+
+
+def prefill_ctx_pages(need_tokens: int, page_size: int,
+                      prefill_pages: int) -> int:
+    """The ``ctx_pages`` bucket a prefill dispatch runs with: enough
+    pages to cover ``need_tokens``, rounded up to the next power of two
+    and capped at the lane capacity.  The single source of the
+    engine's bucketing policy — the fig7 prefill-traffic sweep imports
+    it so its published buckets can never drift from the engine's."""
+    return min(prefill_pages, _next_pow2(-(-need_tokens // page_size)))
 
 
 @dataclasses.dataclass
@@ -131,7 +146,12 @@ class Engine:
         self.prefill_chunk = -(-serve.prefill_chunk // raas.page_size) \
             * raas.page_size
         # prefill slots are contiguous from slot 0; this static bound is
-        # the region a chunked-prefill dispatch attends over.
+        # the page capacity of the prefill region.  Per dispatch the
+        # region actually attended (``ctx_pages``) is bucketed to the
+        # next power of two covering every live lane's progress —
+        # a static kernel-grid parameter, so bucketing caps long-prompt
+        # ingest at O(log S) compiled prefill variants instead of one
+        # per chunk boundary (asserted via ``prefill_traces``).
         self.prefill_pages = -(-serve.max_prefill // raas.page_size)
         # One-shot fallback when chunk-resume can't be lane-exact:
         # SSM state / multi-codebook feeds aren't carried across chunks
@@ -211,6 +231,18 @@ class Engine:
         self.dispatches = 0         # jitted decode-chunk dispatches
         self.prefill_dispatches = 0  # jitted prefill dispatches
         self.traces = 0             # chunk-fn compilations
+        self.prefill_traces = 0     # prefill-chunk-fn compilations
+                                    # (bounded by the ctx_pages buckets)
+        # analytic prefill attention traffic (ops.flash_prefill_cost,
+        # exact from the kernel grid x the per-dispatch chunk-resume
+        # table, summed over attention layers): the paged in-place
+        # number actually paid, and what the pre-paged token-major
+        # gather path would have paid for the same dispatches.
+        self.prefill_kv_bytes = 0
+        self.prefill_kv_bytes_gather = 0
+        self._n_attn_layers = cfg.n_periods * sum(
+            1 for m, _f in cfg.period if m == ATTN)
+        self._kv_itemsize = jnp.dtype(param_dtype).itemsize
 
         raas_cfg, cfg_, impl_, policy = raas, cfg, impl, self.policy
 
@@ -238,10 +270,11 @@ class Engine:
                             jnp.zeros_like(x), x), bc.mamba))
                 for bc in cache.per_pos))
 
-        def _prefill_chunk(params, cache, tokens, chunk_lens, start):
+        def _prefill_chunk(params, cache, tokens, chunk_lens, start,
+                           ctx_pages):
+            self.prefill_traces += 1    # runs at trace time only
             return M.prefill_chunk(params, cfg_, tokens, chunk_lens,
-                                   start, cache,
-                                   ctx_pages=self.prefill_pages,
+                                   start, cache, ctx_pages=ctx_pages,
                                    impl=impl_)
 
         @jax.jit
@@ -260,8 +293,9 @@ class Engine:
 
         self._reset_fn = jax.jit(_reset, **_out(cache_shd))
         self._prefill_chunk_fn = jax.jit(
-            _prefill_chunk, **_out(cache_shd, self._lane2_shd
-                                   if mesh is not None else None))
+            _prefill_chunk, static_argnames=("ctx_pages",),
+            **_out(cache_shd, self._lane2_shd
+                   if mesh is not None else None))
         self._prefill_fn = _prefill_oneshot
         self._chunk_fn = jax.jit(
             _chunk, static_argnames=("steps",),
@@ -393,11 +427,20 @@ class Engine:
             chunk_lens[i] = n
         self.prefill_dispatches += 1
         self.prefill_tokens += int(chunk_lens.sum())
+        # the region this dispatch attends: enough pages to cover every
+        # live lane's post-chunk progress, bucketed to the next power
+        # of two (capped at the lane capacity) so a prompt of any
+        # length hits at most O(log prefill_pages) compiled variants.
+        P = self.raas.page_size
+        need = int((self.prefill_pos + chunk_lens)[chunk_lens > 0].max())
+        ctx_pages = prefill_ctx_pages(need, P, self.prefill_pages)
+        self._account_prefill_bytes(chunk_lens, ctx_pages)
         # every host mirror goes through _dev: defensive copy (dispatch
         # is async) + lane sharding under a mesh.
         self.cache, logits = self._prefill_chunk_fn(
             self.params, self.cache, self._dev(toks),
-            self._dev(chunk_lens), self._dev(self.prefill_pos))
+            self._dev(chunk_lens), self._dev(self.prefill_pos),
+            ctx_pages=ctx_pages)
         self.prefill_pos += chunk_lens
         finished: List[Request] = []
         done_lanes = [i for i in lanes
@@ -411,6 +454,30 @@ class Engine:
                 if req is not None:
                     finished.append(req)
         return finished
+
+    def _account_prefill_bytes(self, chunk_lens: np.ndarray,
+                               ctx_pages: int) -> None:
+        """Accumulate the dispatch's analytic attention traffic: the
+        paged kernel's exact bytes (``prefill_kv_bytes``) and what the
+        pre-paged token-major gather would have paid for the same
+        dispatch (``prefill_kv_bytes_gather`` = kernel + O(ctx)
+        materialization per layer) — the benchmark's
+        ``prefill_bytes_per_token`` numerator."""
+        P = self.raas.page_size
+        C = self.prefill_chunk
+        bQ, ppb = ops.paged_prefill_geometry(C, ctx_pages, P)
+        cost = ops.flash_prefill_cost(
+            H=self.cfg.n_heads, KV=self.cfg.n_kv_heads,
+            hd=self.cfg.resolved_head_dim, Sq=C,
+            ctx_tokens=ctx_pages * P,
+            q_offset=self.prefill_pos,
+            kv_len=np.where(chunk_lens > 0,
+                            self.prefill_pos + chunk_lens, 0),
+            block_q=bQ, block_kv=ppb * P, itemsize=self._kv_itemsize)
+        n = self._n_attn_layers
+        self.prefill_kv_bytes += cost["bytes_accessed"] * n
+        self.prefill_kv_bytes_gather += (
+            cost["bytes_accessed"] + cost["gather_bytes"]) * n
 
     def _prefill_oneshot_step(self, lanes: List[int]) -> List[Request]:
         """Fallback for SSM / multi-codebook models: one-shot prefill

@@ -1,0 +1,303 @@
+"""Zero-copy paged prefill: parity, HLO and jit-cache regression tests.
+
+What is pinned down for the paged flash-prefill kernel rewrite:
+  * **Ragged chunk-resume parity** — jnp oracle vs Pallas interpret
+    across lanes resumed at different offsets, with ragged live
+    lengths, a ``chunk_lens = 0`` ride-along lane, and every
+    ``ctx_pages`` bucket that covers the live region (the Pallas output
+    must be *bit-identical* across buckets: dead blocks contribute
+    exactly nothing).
+  * **Bit-exactness vs the token-major path** — the ``impl='jnp'``
+    paged entry reproduces the pre-kernel gather-then-dense-flash path
+    byte for byte at equal ``ctx_pages`` (it *is* that computation,
+    relocated into the oracle), and the Pallas paged kernel matches the
+    dense Pallas kernel run over a gathered copy.
+  * **HLO zero-copy regression** — the compiled Pallas prefill chunk
+    contains no float transpose/gather at or above the size of the
+    ctx-region token-major copy the old path materialized (same
+    methodology as tests/test_zero_copy.py for decode).
+  * **Jit-cache bound** — power-of-two ``ctx_pages`` bucketing: a long
+    prompt ingested over many chunk boundaries compiles at most
+    O(log prefill_pages) prefill variants.
+  * **Grid-trace dead-block skip** — ``block_is_live`` (the predicate
+    both prefill kernels stage into ``@pl.when``) traced over a whole
+    grid never computes a block wholly past a lane's ``kv_len`` or
+    causal frontier, and agrees with the analytic cost model's live
+    count.
+  * **Sharded paged prefill** — byte parity and identical analytic
+    prefill traffic under a lane-sharded mesh (body in
+    tests/mdev_cases.py, executed everywhere via tests/mdev_harness.py).
+"""
+import copy
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from mdev_harness import run_case
+from test_zero_copy import _copy_ops_at_least
+
+from repro.config import ModelConfig, RaasConfig
+from repro.core import paged_cache as pc
+from repro.kernels import ops
+from repro.kernels.flash_prefill import block_is_live
+from repro.models import model as M
+from repro.serving.engine import Engine, Request
+from repro.serving.scheduler import serve
+
+TINY = ModelConfig(name="tiny", arch_type="dense", n_layers=2, d_model=64,
+                   n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=128,
+                   head_dim=16)
+RAAS = RaasConfig(policy="raas", budget_tokens=64, page_size=4)
+
+
+def _ragged_cache(rng, B=3, KV=2, hd=16, P=4, S=24, n_tok=48,
+                  lengths=(37, 21, 0)):
+    spec = pc.CacheSpec(S, P, KV, hd, jnp.float32)
+    cache = pc.init_cache(spec, B)
+    k = jnp.asarray(rng.standard_normal((B, n_tok, KV, hd)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, n_tok, KV, hd)), jnp.float32)
+    return pc.ingest_prefill(cache, k, v, jnp.asarray(lengths, jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# kernel parity across ragged chunk-resume offsets
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("ctx_pages", [10, 12, 16])
+def test_paged_prefill_parity_ragged_offsets(ctx_pages):
+    """Lanes mid-prompt at different offsets, a ragged final page, and
+    a ``chunk_lens = 0`` ride-along lane (lane 2: kv_len 0 — every one
+    of its blocks is dead): oracle vs Pallas interpret."""
+    rng = np.random.default_rng(0)
+    cache = _ragged_cache(rng)
+    B, C, H, hd = 3, 8, 4, 16
+    q = jnp.asarray(rng.standard_normal((B, C, H, hd)), jnp.float32)
+    off = jnp.asarray([32, 16, 0], jnp.int32)
+    lim = jnp.asarray([37, 21, 0], jnp.int32)    # lane 2 rides along
+    ref = ops.paged_flash_prefill(q, cache.k_pages, cache.v_pages, 0.25,
+                                  off, lim, ctx_pages=ctx_pages,
+                                  impl="jnp")
+    got = ops.paged_flash_prefill(q, cache.k_pages, cache.v_pages, 0.25,
+                                  off, lim, ctx_pages=ctx_pages,
+                                  impl="pallas_interpret",
+                                  block_q=8, block_k=8)
+    # only live query rows are meaningful (dead rows attend nothing)
+    live = np.asarray(off)[:, None] + np.arange(C)[None] \
+        < np.asarray(lim)[:, None]
+    err = np.abs(np.where(live[..., None, None],
+                          np.asarray(ref - got), 0.0)).max()
+    assert float(err) < 2e-5
+    # ride-along lane: the kernel skips every block -> exact zeros
+    assert np.array_equal(np.asarray(got)[2], np.zeros((C, H, hd)))
+
+
+def test_paged_prefill_pallas_bucket_invariant():
+    """Dead blocks contribute exactly nothing: the Pallas output is
+    bit-identical across every ``ctx_pages`` bucket covering the live
+    region — the engine's bucketing can never perturb a logit."""
+    rng = np.random.default_rng(1)
+    cache = _ragged_cache(rng)
+    q = jnp.asarray(rng.standard_normal((3, 8, 4, 16)), jnp.float32)
+    off = jnp.asarray([32, 16, 0], jnp.int32)
+    lim = jnp.asarray([37, 21, 0], jnp.int32)
+    outs = [np.asarray(ops.paged_flash_prefill(
+        q, cache.k_pages, cache.v_pages, 0.25, off, lim, ctx_pages=cp,
+        impl="pallas_interpret", block_q=8, block_k=8))
+        for cp in (10, 12, 16, 24)]
+    for other in outs[1:]:
+        np.testing.assert_array_equal(outs[0], other)
+
+
+def test_paged_prefill_bit_exact_vs_token_major_path():
+    """The paged entry at ``impl='jnp'`` IS the pre-PR token-major path
+    (gather + dense flash oracle), byte for byte; the Pallas paged
+    kernel matches the dense Pallas kernel over a gathered copy."""
+    rng = np.random.default_rng(2)
+    cache = _ragged_cache(rng, lengths=(37, 21, 48))
+    B, C, H, KV, hd, P = 3, 8, 4, 2, 16, 4
+    ctx_pages = 12
+    q = jnp.asarray(rng.standard_normal((B, C, H, hd)), jnp.float32)
+    off = jnp.asarray([32, 16, 40], jnp.int32)
+    lim = jnp.asarray([37, 21, 48], jnp.int32)
+    # the pre-PR blocks.block_prefill_chunk body, verbatim
+    kc = cache.k_pages[:, :, :ctx_pages].transpose(0, 2, 3, 1, 4) \
+        .reshape(B, ctx_pages * P, KV, hd)
+    vc = cache.v_pages[:, :, :ctx_pages].transpose(0, 2, 3, 1, 4) \
+        .reshape(B, ctx_pages * P, KV, hd)
+    old = ops.flash_prefill(q, kc, vc, 0.25, q_offset=off, kv_len=lim,
+                            impl="jnp")
+    new = ops.paged_flash_prefill(q, cache.k_pages, cache.v_pages, 0.25,
+                                  off, lim, ctx_pages=ctx_pages,
+                                  impl="jnp")
+    np.testing.assert_array_equal(np.asarray(old), np.asarray(new))
+
+    dense_pl = ops.flash_prefill(q, kc, vc, 0.25, q_offset=off,
+                                 kv_len=lim, impl="pallas_interpret",
+                                 block_q=8, block_k=8)
+    paged_pl = ops.paged_flash_prefill(q, cache.k_pages, cache.v_pages,
+                                       0.25, off, lim,
+                                       ctx_pages=ctx_pages,
+                                       impl="pallas_interpret",
+                                       block_q=8, block_k=8)
+    live = np.asarray(off)[:, None] + np.arange(C)[None] \
+        < np.asarray(lim)[:, None]
+    err = np.abs(np.where(live[..., None, None],
+                          np.asarray(dense_pl - paged_pl), 0.0)).max()
+    assert float(err) < 2e-5
+
+
+# ---------------------------------------------------------------------------
+# HLO zero-copy regression on the compiled prefill chunk
+# ---------------------------------------------------------------------------
+def test_pallas_prefill_chunk_hlo_has_no_kv_copy():
+    """The Pallas prefill chunk must read the page-major cache in
+    place: no float transpose/gather at or above the size of the old
+    token-major ctx-region copy may appear in the optimized HLO (the
+    chunk's own O(C) ingest reshape is far below the threshold)."""
+    B, C, max_prefill, max_seq = 2, 8, 64, 128
+    params = M.init_params(jax.random.PRNGKey(0), TINY)
+    cache = M.init_model_cache(TINY, RAAS, B, max_seq,
+                               prefill_len=max_prefill)
+    ctx_pages = max_prefill // RAAS.page_size            # 16 pages
+    toks = jnp.zeros((B, C), jnp.int32)
+    cl = jnp.full((B,), C, jnp.int32)
+    start = jnp.zeros((B,), jnp.int32)
+    fn = jax.jit(lambda p, c, t, l, s: M.prefill_chunk(
+        p, TINY, t, l, s, c, ctx_pages=ctx_pages,
+        impl="pallas_interpret"))
+    comp = fn.lower(params, cache, toks, cl, start).compile()
+    ctx_copy_elems = B * ctx_pages * RAAS.page_size \
+        * TINY.n_kv_heads * TINY.head_dim
+    bad = _copy_ops_at_least(comp.as_text(), ctx_copy_elems)
+    assert not bad, f"KV-sized copies in pallas prefill chunk: {bad}"
+
+
+def test_oracle_prefill_chunk_gather_is_o_ctx_not_o_s():
+    """The jnp oracle may gather the ctx region (inherent to jnp) but
+    must never touch slots beyond ``ctx_pages`` — with a cache far
+    larger than the prefill region, no full-cache-sized copy appears."""
+    B, C, max_prefill = 2, 8, 16
+    # huge decode budget -> many slots beyond the 4-page prefill region
+    raas = RaasConfig(policy="raas", budget_tokens=192, page_size=4)
+    params = M.init_params(jax.random.PRNGKey(0), TINY)
+    cache = M.init_model_cache(TINY, raas, B, 256,
+                               prefill_len=max_prefill)
+    S = cache.per_pos[0].attn.k_pages.shape[3]
+    ctx_pages = max_prefill // raas.page_size
+    assert S > 2 * ctx_pages
+    fn = jax.jit(lambda p, c, t, l, s: M.prefill_chunk(
+        p, TINY, t, l, s, c, ctx_pages=ctx_pages, impl="jnp"))
+    comp = fn.lower(params, cache, jnp.zeros((B, C), jnp.int32),
+                    jnp.full((B,), C, jnp.int32),
+                    jnp.zeros((B,), jnp.int32)).compile()
+    full_cache_elems = B * TINY.n_kv_heads * S * raas.page_size \
+        * TINY.head_dim
+    bad = _copy_ops_at_least(comp.as_text(), full_cache_elems)
+    assert not bad, f"full-cache copies in oracle prefill chunk: {bad}"
+
+
+# ---------------------------------------------------------------------------
+# ctx_pages bucketing: jit-cache bound
+# ---------------------------------------------------------------------------
+def test_ctx_pages_bucketing_bounds_prefill_compilations():
+    """A 60-token prompt ingested 4 tokens per dispatch crosses 15
+    chunk boundaries; power-of-two bucketing must compile at most
+    log2(prefill_pages) + 1 prefill variants (and strictly fewer than
+    the dispatch count), while still serving exactly."""
+    params = M.init_params(jax.random.PRNGKey(0), TINY)
+    eng = Engine(params, TINY, RAAS, batch_slots=2, max_seq=128,
+                 max_prefill=64, prefill_chunk=4, chunk_steps=4)
+    rng = np.random.default_rng(3)
+    prompt = rng.integers(0, TINY.vocab_size, size=60).astype(np.int32)
+    req = Request(uid=0, prompt=prompt, max_new_tokens=4)
+    done = serve(eng, [req])
+    assert len(done) == 1 and len(req.output) == 4
+    assert eng.prefill_dispatches == 15
+    prefill_pages = 64 // RAAS.page_size                  # 16
+    bound = prefill_pages.bit_length() + 1                # log2 + 1
+    assert eng.prefill_traces <= bound, \
+        (eng.prefill_traces, bound)
+    assert eng.prefill_traces < eng.prefill_dispatches
+    # the analytic accounting ran per dispatch, paged strictly cheaper
+    assert 0 < eng.prefill_kv_bytes < eng.prefill_kv_bytes_gather
+
+
+def test_long_prompt_byte_parity_vs_sequential_reference():
+    """Bit-exact long-prompt byte parity: the same mixed workload
+    served continuously (bucketed paged prefill interleaving with
+    decode) and sequentially (one request at a time through the same
+    engine geometry) must emit identical bytes."""
+    params = M.init_params(jax.random.PRNGKey(0), TINY)
+    rng = np.random.default_rng(4)
+    lens = [40, 3, 57, 17]
+    reqs = [Request(uid=i,
+                    prompt=rng.integers(0, TINY.vocab_size,
+                                        size=n).astype(np.int32),
+                    max_new_tokens=6) for i, n in enumerate(lens)]
+
+    def mk():
+        return Engine(params, TINY, RAAS, batch_slots=2, max_seq=160,
+                      max_prefill=64, prefill_chunk=8, chunk_steps=4)
+
+    cont = copy.deepcopy(reqs)
+    done = serve(mk(), cont)
+    assert len(done) == len(reqs)
+    seq_eng = mk()
+    for r in reqs:
+        seq_eng.admit(r)
+        seq_eng.drain_prefill()
+        while seq_eng.has_active():
+            seq_eng.step_chunk()
+    for a, b in zip(sorted(cont, key=lambda r: r.uid),
+                    sorted(reqs, key=lambda r: r.uid)):
+        assert a.output == b.output, f"uid {a.uid} diverged"
+
+
+# ---------------------------------------------------------------------------
+# grid-trace: dead-tail blocks are skipped by construction
+# ---------------------------------------------------------------------------
+def test_dead_tail_block_skip_grid_trace():
+    """Trace ``block_is_live`` — the exact predicate both prefill
+    kernels stage into ``@pl.when`` — over a whole (lane, qi, ki) grid:
+    no computed block may start at or past the lane's ``kv_len``
+    (ragged dead tail) or past its causal frontier, every causally
+    needed live block IS computed, and the per-(lane, qi) live count
+    matches the analytic cost model's."""
+    bQ, bT = 8, 8
+    Sq, ctx_tokens = 16, 64
+    nQ, nK = Sq // bQ, ctx_tokens // bT
+    offsets = [0, 24, 40, 0]
+    kv_lens = [8, 29, 40, 0]                  # incl. a dead lane
+    H, KV, hd, itemsize = 4, 2, 16, 4
+    live_counts = []
+    for off, lim in zip(offsets, kv_lens):
+        for qi in range(nQ):
+            last_q = qi * bQ + (bQ - 1) + off
+            computed = [ki for ki in range(nK)
+                        if block_is_live(ki * bT, last_q, lim)]
+            for ki in computed:
+                assert ki * bT < lim, \
+                    f"dead-tail block {ki} computed (kv_len {lim})"
+                assert ki * bT <= last_q, \
+                    f"causal-future block {ki} computed"
+            # completeness: every block holding a live attendable key
+            for ki in range(nK):
+                if ki * bT < min(lim, last_q + 1):
+                    assert ki in computed, f"live block {ki} skipped"
+            live_counts.append(max(len(computed), 1))
+    cost = ops.flash_prefill_cost(
+        H=H, KV=KV, hd=hd, Sq=Sq, ctx_tokens=ctx_tokens,
+        q_offset=np.asarray(offsets), kv_len=np.asarray(kv_lens),
+        block_q=bQ, block_kv=bT, itemsize=itemsize)
+    kv_bytes = sum(live_counts) * H * bT * hd * itemsize * 2
+    qo_bytes = 2 * len(offsets) * H * Sq * hd * itemsize
+    assert cost["bytes_accessed"] == kv_bytes + qo_bytes \
+        + 2 * len(offsets) * 4
+
+
+# ---------------------------------------------------------------------------
+# sharded paged prefill (multi-device case body in mdev_cases.py)
+# ---------------------------------------------------------------------------
+def test_sharded_paged_prefill_byte_parity():
+    run_case("case_paged_prefill_sharded")

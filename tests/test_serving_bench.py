@@ -15,13 +15,21 @@ from benchmarks import serving_throughput
 
 def test_serving_throughput_smoke():
     """Tight budget: 5 requests covering sub-chunk and multi-chunk
-    prompts; all the benchmark's honesty assertions run inside."""
+    prompts; all the benchmark's honesty assertions run inside —
+    including the prefill-heavy row's paged-vs-gather analytic-bytes
+    comparison and the ctx_pages jit-cache bound."""
     result = serving_throughput.run(n_requests=5, write_json=False)
     cont, seq = result["continuous"], result["sequential"]
     assert cont["dispatches"] < seq["dispatches"]
     assert cont["tokens_emitted"] == seq["tokens_emitted"] > 0
     # multi-chunk ingest really happened (128-token prompt, 32/dispatch)
     assert cont["prefill_dispatches"] > 1
+    # zero-copy prefill: the paged kernel's analytic bytes/prompt-token
+    # strictly beat what the token-major gather path would have paid
+    ph = result["prefill_heavy"]
+    assert 0 < ph["prefill_bytes_per_token"] \
+        < ph["prefill_bytes_per_token_gather"]
+    assert ph["prefill_tokens"] > ph["tokens_emitted"]  # truly prefill-heavy
 
 
 @pytest.mark.slow
@@ -29,3 +37,12 @@ def test_serving_throughput_full_sweep():
     result = serving_throughput.run(n_requests=15, write_json=False)
     assert result["continuous"]["dispatches"] \
         < result["sequential"]["dispatches"]
+
+
+@pytest.mark.slow
+def test_serving_prefill_heavy_full_sweep():
+    """Full-budget prefill-heavy sweep (long prompts, 1-3 token
+    outputs): the paged path's analytic savings at scale."""
+    result = serving_throughput.run(n_requests=20, write_json=False)
+    ph = result["prefill_heavy"]
+    assert ph["prefill_kv_bytes"] < ph["prefill_kv_bytes_gather"]
