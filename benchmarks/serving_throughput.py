@@ -149,6 +149,36 @@ def _run_sharded(params, reqs, max_seq, mesh_spec: str) -> Dict:
     return out
 
 
+def _donation_audit(params, max_seq) -> Dict:
+    """Compile the bench engine's three jitted dispatches and measure
+    cache donation with the repro.analysis passes: the audit must find
+    zero large un-donated buffers, and on every dispatch the aliased
+    (donated) bytes must cover at least the paged KV cache — the
+    structural form of "donation removed the cache's second live copy".
+    The KV-copy pass is skipped here: the bench runs the RaaS policy,
+    whose O(L) cache is smaller than one chunk's attention intermediates
+    (the quest row of `python -m repro.analysis.run` carries that
+    regression)."""
+    from repro.analysis import engine_audit
+    eng = _engine(params, max_seq)
+    findings, report = engine_audit.audit_engine(
+        eng, kv_copy_min_elems={"prefill_chunk": 0, "decode_chunk": 0})
+    assert not findings, "\n".join(f.format() for f in findings)
+    kv_bytes = eng.kv_cache_bytes()
+    for name, rep in report.items():
+        assert rep["alias_bytes"] >= kv_bytes, (name, rep)
+    return {
+        "kv_cache_bytes": kv_bytes,
+        "per_dispatch": report,
+        "peak_live_bytes":
+            max(r["peak_live_bytes"] for r in report.values()),
+        "peak_live_bytes_undonated":
+            max(r["peak_live_bytes_undonated"] for r in report.values()),
+        "donation_saved_bytes":
+            min(r["alias_bytes"] for r in report.values()),
+    }
+
+
 def _run_sequential(params, reqs, max_seq) -> Dict:
     """One request at a time: admit -> full prefill -> decode to
     completion.  Same engine geometry, one lane ever busy."""
@@ -201,6 +231,8 @@ def run(n_requests: int = 15, write_json: bool = True,
     assert ph["prefill_traces"] <= max_buckets, \
         (ph["prefill_traces"], max_buckets)
 
+    don = _donation_audit(params, max_seq)
+
     shard = None
     if mesh_spec:
         shard = _run_sharded(params, copy.deepcopy(reqs), max_seq, mesh_spec)
@@ -248,6 +280,12 @@ def run(n_requests: int = 15, write_json: bool = True,
               f"{shard['kv_bytes_per_device']/1e6:.2f}MB,"
               f"kv_global={shard['kv_bytes_global']/1e6:.2f}MB,"
               f"n_devices={shard['n_devices']}", flush=True)
+    print(f"serving/donation,saved="
+          f"{don['donation_saved_bytes']/1e6:.2f}MB,"
+          f"peak_live={don['peak_live_bytes']/1e6:.2f}MB,"
+          f"undonated_would_be="
+          f"{don['peak_live_bytes_undonated']/1e6:.2f}MB,"
+          f"kv_cache={don['kv_cache_bytes']/1e6:.2f}MB", flush=True)
     speedup = cont["tok_per_s"] / max(seq["tok_per_s"], 1e-9)
     print(f"serving/continuous-vs-sequential,{speedup:.2f}x,"
           f"dispatch_ratio="
@@ -255,7 +293,7 @@ def run(n_requests: int = 15, write_json: bool = True,
           flush=True)
 
     result = {
-        "schema": "serving/v3-paged-prefill",
+        "schema": "serving/v4-donation",
         "model": BENCH_MODEL.name,
         "batch_slots": BATCH_SLOTS,
         "max_prefill": MAX_PREFILL,
@@ -268,6 +306,7 @@ def run(n_requests: int = 15, write_json: bool = True,
         "continuous": {k: v for k, v in cont.items() if k != "outputs"},
         "sequential": {k: v for k, v in seq.items() if k != "outputs"},
         "prefill_heavy": {k: v for k, v in ph.items() if k != "outputs"},
+        "donation": don,
         "throughput_speedup": speedup,
     }
     if shard is not None:

@@ -1,0 +1,21 @@
+"""Static-analysis suite for the repo's zero-copy serving contracts.
+
+Two layers keep every PR honest about the invariants that make RaaS's
+O(L) time *and* O(L) memory real on device:
+
+* :mod:`repro.analysis.lint` — an AST pass over ``src/`` enforcing
+  source-level contracts as named, suppressible rules (``pallas_call``
+  only in ``kernels/``, explicit ``interpret=`` on raw Pallas entries,
+  no host syncs in the serving dispatch loop, no fancy-index gathers on
+  the paged cache outside kernels, policy files importing only
+  ``policy_base``).
+* :mod:`repro.analysis.hlo` — passes over optimized HLO / compiled
+  programs (KV-sized-copy detector, host-transfer detector, collective
+  accountant, donation auditor, jit-cache-growth guard), shared by the
+  tests, the benchmarks and the dry-run tooling.
+
+``python -m repro.analysis.run --strict`` runs both layers over the
+repo plus a compiled engine-dispatch matrix and exits non-zero on any
+unsuppressed finding — the CI ``static-analysis`` leg.
+"""
+from repro.analysis.findings import Finding, format_findings  # noqa: F401

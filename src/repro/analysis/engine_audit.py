@@ -1,0 +1,105 @@
+"""Audit a live :class:`~repro.serving.engine.Engine`'s jitted
+dispatches with the :mod:`repro.analysis.hlo` passes.
+
+The engine's three chunked dispatch functions (``reset``,
+``prefill_chunk``, ``decode_chunk``) are lowered ahead-of-time with
+``ShapeDtypeStruct`` stand-ins (no device allocation beyond what the
+engine already holds) and compiled; each optimized program then runs
+through the KV-copy, host-transfer, collective and donation passes.
+The jit-cache guard is *not* run here — AOT lowering re-traces and
+would inflate the engine's trace counters; callers check those against
+:func:`repro.analysis.hlo.jit_cache_findings` before auditing.
+
+Used by the CLI (``python -m repro.analysis.run``), the serving
+benchmark (donation before/after accounting in ``BENCH_serving.json``)
+and tests/test_analysis.py.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis import hlo
+from repro.analysis.findings import Finding
+
+DISPATCHES = ("reset", "prefill_chunk", "decode_chunk")
+
+
+def _sds(x) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(jnp.shape(x), x.dtype)
+
+
+def dispatch_lowerings(eng) -> Dict[str, "jax.stages.Lowered"]:
+    """AOT-lower the engine's chunked dispatches with struct stand-ins
+    shaped exactly like a real serving call.  Requires the chunked
+    prefill path (the one-shot fallback archs splice rows host-side and
+    have no reset / prefill_chunk dispatch to audit)."""
+    if not eng.chunked_prefill:
+        raise ValueError(
+            "engine uses the one-shot prefill fallback (SSM / MoE / "
+            "multi-codebook): only decode_chunk exists as a chunked "
+            "dispatch — audit a chunked-prefill arch instead")
+    params_s = jax.tree.map(_sds, eng.params)
+    cache_s = jax.tree.map(_sds, eng.cache)
+    B, C = eng.B, eng.prefill_chunk
+    lane_i32 = jax.ShapeDtypeStruct((B,), jnp.int32)
+    lane_bool = jax.ShapeDtypeStruct((B,), jnp.bool_)
+    toks = jax.ShapeDtypeStruct((B, C), jnp.int32)
+    return {
+        "reset": eng._reset_fn.lower(cache_s, lane_bool),
+        "prefill_chunk": eng._prefill_chunk_fn.lower(
+            params_s, cache_s, toks, lane_i32, lane_i32,
+            ctx_pages=eng.prefill_pages),
+        "decode_chunk": eng._chunk_fn.lower(
+            params_s, cache_s, lane_i32, lane_i32, lane_bool, lane_i32,
+            lane_i32, lane_i32, steps=eng.chunk_steps),
+    }
+
+
+def full_cache_elems(eng) -> int:
+    """Element count of one full token-major copy of the paged KV cache
+    (one layer): the classic threshold above which a transpose/gather
+    in a dispatch is an O(S) copy, not bookkeeping."""
+    k = eng.cache.per_pos[0].attn.k_pages
+    # per-block caches are scan-stacked over layers: [L, B, KV, S, P, hd]
+    B, KV, S, P, hd = k.shape[-5:]
+    return B * KV * S * P * hd
+
+
+def audit_engine(eng, *, min_donate_bytes: int = 1 << 16,
+                 kv_copy_min_elems: Optional[Dict[str, int]] = None,
+                 collective_budget: float = 0.0,
+                 allow_undonated: Optional[Dict[str, str]] = None,
+                 ) -> Tuple[List[Finding], Dict[str, Dict]]:
+    """Compile the engine's dispatches and run every HLO pass.
+
+    ``kv_copy_min_elems`` maps dispatch name -> copy threshold in
+    elements (default: one full cache copy, :func:`full_cache_elems`);
+    a dispatch mapped to 0/None skips the copy pass (e.g. the decode
+    chunk of a policy whose *selection* is legitimately the whole O(L)
+    cache).  Returns (findings, per-dispatch report of donation and
+    collective accounting).
+    """
+    default_elems = full_cache_elems(eng)
+    findings: List[Finding] = []
+    report: Dict[str, Dict] = {}
+    for name, lowered in dispatch_lowerings(eng).items():
+        compiled = lowered.compile()
+        text = compiled.as_text()
+        min_elems = default_elems if kv_copy_min_elems is None \
+            else kv_copy_min_elems.get(name, default_elems)
+        if min_elems:
+            findings.extend(hlo.kv_copy_findings(text, min_elems,
+                                                 label=name))
+        findings.extend(hlo.host_transfer_findings(text, label=name))
+        findings.extend(hlo.collective_findings(
+            text, max_bytes=collective_budget, label=name))
+        findings.extend(hlo.donation_findings(
+            text, min_bytes=min_donate_bytes, label=name,
+            allow=allow_undonated))
+        rep = hlo.donation_report(compiled)
+        rep["collective_bytes"] = hlo.collective_bytes(text)["total"]
+        report[name] = rep
+    return findings, report

@@ -1,0 +1,32 @@
+"""The one finding type every analysis pass emits.
+
+A finding pins a *named rule* to a *span* (file + line for source
+lint, HLO instruction text for compiled-program passes) with a
+human-actionable message.  Passes never print or raise — they return
+findings, and the caller (CLI, test, benchmark) decides severity.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable, List
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    rule: str            # stable kebab-case rule id, e.g. "kv-copy"
+    path: str            # repo-relative file, or a dispatch label
+    line: int            # 1-based source / HLO-text line (0 = whole file)
+    message: str         # what is wrong and why it matters
+    span: str = ""       # the offending source / HLO line, trimmed
+
+    def format(self) -> str:
+        loc = f"{self.path}:{self.line}" if self.line else self.path
+        out = f"{loc}: [{self.rule}] {self.message}"
+        if self.span:
+            out += f"\n    | {self.span}"
+        return out
+
+
+def format_findings(findings: Iterable[Finding]) -> str:
+    lines: List[str] = [f.format() for f in findings]
+    return "\n".join(lines)

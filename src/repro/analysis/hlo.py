@@ -1,0 +1,400 @@
+"""Passes over optimized HLO / compiled programs: the hot-path
+invariants behind the repo's zero-copy claims, as reusable analyzers.
+
+Every pass is pure text/metadata analysis — it takes the optimized HLO
+of a compiled program (``compiled.as_text()``) and returns
+:class:`~repro.analysis.findings.Finding` objects (or raw dicts for
+the accountants).  The passes are the single home of heuristics that
+used to live as private parsers in tests/test_zero_copy.py,
+tests/test_paged_prefill.py and launch/hlo_analysis.py:
+
+* **KV-sized-copy detector** (:func:`kv_copy_ops`,
+  :func:`kv_copy_findings`) — float transpose/gather instructions at or
+  above a KV-copy threshold: page selection must reach kernels as
+  indices, never as copied tensors.
+* **Host-transfer detector** (:func:`host_transfer_findings`) —
+  infeed/outfeed/send/recv, host custom-calls and non-default memory
+  spaces; a compiled dispatch must never bounce through the host.
+* **Collective accountant** (:func:`collective_bytes`,
+  :func:`count_collectives`, :func:`collective_findings`) — ring-model
+  per-device link bytes by collective kind, plus a budget check.
+* **Donation auditor** (:func:`donation_findings`,
+  :func:`donation_report`) — large pass-through buffers (the paged
+  cache above all) handed to a jitted dispatch without
+  ``donate_argnums``: each one holds TWO live copies of the buffer
+  across the dispatch instead of one.
+* **Jit-cache-growth guard** (:func:`jit_cache_findings`) — trace
+  counts against the engine's power-of-two bucketing bound; unbounded
+  recompiles are a serving memory leak.
+
+Ring-model bytes-on-the-wire per device, for group size g and result
+payload R bytes:
+  all-gather          (g-1)/g * R        (R is the gathered result)
+  all-reduce          2*(g-1)/g * R      (reduce-scatter + all-gather)
+  reduce-scatter      (g-1) * R          (R is the scattered result)
+  all-to-all          (g-1)/g * R
+  collective-permute  R
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.analysis.findings import Finding
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = re.search(r"replica_groups=\{\{([^}]*)\}", line)
+    if m:
+        return max(1, len(m.group(1).split(",")))
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", line)
+    if m:  # iota format [num_groups, group_size]
+        return max(1, int(m.group(2)))
+    return 1
+
+
+# ---------------------------------------------------------------------------
+# collective accountant
+# ---------------------------------------------------------------------------
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Per-device link bytes by collective kind + 'total'."""
+    out: Dict[str, float] = {k: 0.0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        m = re.match(r"(?:ROOT\s+)?%?[\w\.\-]+\s*=\s*(\(?[^=]*?)\s*"
+                     r"(all-gather|all-reduce|reduce-scatter|all-to-all|"
+                     r"collective-permute)(-start|-done)?\(", s)
+        if not m:
+            continue
+        shape_str, kind, phase = m.group(1), m.group(2), m.group(3)
+        if phase == "-done":
+            continue  # counted at -start
+        payload = _shape_bytes(shape_str)
+        g = _group_size(s)
+        if g <= 1 and kind != "collective-permute":
+            continue
+        if kind == "all-gather":
+            traffic = payload * (g - 1) / g
+        elif kind == "all-reduce":
+            traffic = payload * 2 * (g - 1) / g
+        elif kind == "reduce-scatter":
+            traffic = payload * (g - 1)
+        elif kind == "all-to-all":
+            traffic = payload * (g - 1) / g
+        else:
+            traffic = payload
+        out[kind] += traffic
+    out["total"] = sum(out[k] for k in _COLLECTIVES)
+    return out
+
+
+def count_collectives(hlo_text: str) -> Dict[str, int]:
+    counts: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    for kind in _COLLECTIVES:
+        counts[kind] = len(re.findall(rf"\b{kind}(?:-start)?\(", hlo_text))
+    return counts
+
+
+def collective_findings(hlo_text: str, max_bytes: float = 0.0,
+                        label: str = "hlo") -> List[Finding]:
+    """Budget check: total per-device collective traffic above
+    ``max_bytes`` is a finding (0 = the dispatch must be
+    collective-free, the single-device hot-path contract)."""
+    coll = collective_bytes(hlo_text)
+    if coll["total"] <= max_bytes:
+        return []
+    detail = ", ".join(f"{k}={v:.0f}B" for k, v in coll.items()
+                       if k != "total" and v)
+    return [Finding(
+        rule="collective-traffic", path=label, line=0,
+        message=f"dispatch moves {coll['total']:.0f} collective bytes "
+                f"per device (budget {max_bytes:.0f}): {detail}")]
+
+
+# v5e hardware model (per chip)
+PEAK_FLOPS_BF16 = 197e12        # FLOP/s
+HBM_BW = 819e9                  # B/s
+ICI_BW = 50e9                   # B/s per link
+
+
+def roofline_terms(flops_per_device: float, bytes_per_device: float,
+                   coll_bytes_per_device: float) -> Dict[str, float]:
+    return {
+        "compute_s": flops_per_device / PEAK_FLOPS_BF16,
+        "memory_s": bytes_per_device / HBM_BW,
+        "collective_s": coll_bytes_per_device / ICI_BW,
+    }
+
+
+# ---------------------------------------------------------------------------
+# KV-sized-copy detector
+# ---------------------------------------------------------------------------
+_COPY_OP = re.compile(
+    r"=\s*(f32|bf16|f16)\[([\d,]*)\][^ ]*\s+(transpose|gather)\(")
+
+
+def kv_copy_ops(hlo_text: str, min_elems: int
+                ) -> List[Tuple[str, Tuple[int, ...], int, str]]:
+    """(op, dims, line_no, line) of float transpose/gather instructions
+    whose output holds >= ``min_elems`` elements — the shape of a
+    materialized KV copy the zero-copy kernels exist to avoid."""
+    found = []
+    for no, line in enumerate(hlo_text.splitlines(), start=1):
+        m = _COPY_OP.search(line)
+        if not m:
+            continue
+        dims = tuple(int(d) for d in m.group(2).split(",") if d)
+        n = 1
+        for d in dims:
+            n *= d
+        if n >= min_elems:
+            found.append((m.group(3), dims, no, line.strip()))
+    return found
+
+
+def kv_copy_findings(hlo_text: str, min_elems: int,
+                     label: str = "hlo") -> List[Finding]:
+    return [Finding(
+        rule="kv-copy", path=label, line=no,
+        message=f"{op} materializes {dims} "
+                f"(>= {min_elems} elements) — a KV-sized copy on a "
+                "path that must consume the cache in place",
+        span=span)
+        for op, dims, no, span in kv_copy_ops(hlo_text, min_elems)]
+
+
+# ---------------------------------------------------------------------------
+# host-transfer detector
+# ---------------------------------------------------------------------------
+_HOST_OP = re.compile(
+    r"=\s*\(?[^=]*?\s*(infeed|outfeed|send|recv)(-start|-done)?\(")
+_CUSTOM_CALL_TARGET = re.compile(r'custom_call_target="([^"]*)"')
+_MEM_SPACE = re.compile(r"\{[\d,]*:[^}]*S\((\d+)\)")
+
+
+def host_transfer_findings(hlo_text: str,
+                           label: str = "hlo") -> List[Finding]:
+    """Ops that move bytes between device and host inside a compiled
+    program: infeed/outfeed, send/recv, host custom-calls
+    (MoveToHost and friends) and buffers annotated into a non-default
+    memory space.  The hot path syncs at dispatch boundaries only — a
+    transfer *inside* the program serializes every step."""
+    out: List[Finding] = []
+    for no, line in enumerate(hlo_text.splitlines(), start=1):
+        s = line.strip()
+        m = _HOST_OP.search(s)
+        if m and m.group(2) != "-done":
+            out.append(Finding(
+                rule="host-transfer", path=label, line=no,
+                message=f"`{m.group(1)}` op inside the compiled program "
+                        "— host I/O on the hot path", span=s))
+            continue
+        m = _CUSTOM_CALL_TARGET.search(s)
+        if m and re.search(r"(?i)host", m.group(1)):
+            out.append(Finding(
+                rule="host-transfer", path=label, line=no,
+                message=f"host custom-call `{m.group(1)}` — buffer "
+                        "migration to host inside the program", span=s))
+            continue
+        m = _MEM_SPACE.search(s)
+        if m and m.group(1) != "0":
+            out.append(Finding(
+                rule="host-transfer", path=label, line=no,
+                message=f"buffer placed in memory space S({m.group(1)}) "
+                        "— off-device residency on the hot path", span=s))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# donation auditor
+# ---------------------------------------------------------------------------
+def _split_top_level(s: str) -> List[str]:
+    """Split on commas not nested in (), [] or {}."""
+    parts, depth, cur = [], 0, []
+    for ch in s:
+        if ch in "([{":
+            depth += 1
+        elif ch in ")]}":
+            depth -= 1
+        if ch == "," and depth == 0:
+            parts.append("".join(cur).strip())
+            cur = []
+        else:
+            cur.append(ch)
+    tail = "".join(cur).strip()
+    if tail:
+        parts.append(tail)
+    return parts
+
+
+def _extract_braced(text: str, key: str) -> Optional[str]:
+    """The balanced ``{...}`` payload following ``key=`` (sans braces)."""
+    start = text.find(key + "={")
+    if start < 0:
+        return None
+    i = start + len(key) + 1
+    depth = 0
+    for j in range(i, len(text)):
+        if text[j] == "{":
+            depth += 1
+        elif text[j] == "}":
+            depth -= 1
+            if depth == 0:
+                return text[i + 1:j]
+    return None
+
+
+def _norm_shape(tok: str) -> str:
+    """'f32[4,2]{1,0}' -> 'f32[4,2]' (layout/memory-space stripped)."""
+    m = _SHAPE_RE.search(tok)
+    return f"{m.group(1)}[{m.group(2)}]" if m else tok
+
+
+def entry_params_and_outputs(hlo_text: str
+                             ) -> Tuple[List[str], List[str]]:
+    """Normalized parameter and output shapes of the entry computation,
+    in declaration order, from ``entry_computation_layout``."""
+    layout = _extract_braced(hlo_text, "entry_computation_layout")
+    if layout is None:
+        raise ValueError("no entry_computation_layout in HLO text")
+    lhs, _, rhs = layout.partition("->")
+    lhs, rhs = lhs.strip(), rhs.strip()
+    if lhs.startswith("("):
+        lhs = lhs[1:lhs.rfind(")")]
+    if rhs.startswith("("):
+        rhs = rhs[1:rhs.rfind(")")]
+    params = [_norm_shape(t) for t in _split_top_level(lhs) if t]
+    outs = [_norm_shape(t) for t in _split_top_level(rhs) if t]
+    return params, outs
+
+
+_ALIAS_ENTRY = re.compile(r"\{([\d,\s]*)\}:\s*\((\d+)")
+
+
+def donated_params(hlo_text: str) -> Dict[int, int]:
+    """param_number -> output index for every ``input_output_alias``
+    entry of the module header (empty when nothing is donated)."""
+    block = _extract_braced(hlo_text, "input_output_alias")
+    if block is None:
+        return {}
+    out: Dict[int, int] = {}
+    for m in _ALIAS_ENTRY.finditer(block):
+        out_idx = m.group(1).split(",")[0].strip()
+        out[int(m.group(2))] = int(out_idx) if out_idx else 0
+    return out
+
+
+def donation_findings(hlo_text: str, min_bytes: int,
+                      label: str = "hlo",
+                      allow: Optional[Dict[str, str]] = None
+                      ) -> List[Finding]:
+    """Large un-donated pass-through buffers in a compiled program.
+
+    A parameter of at least ``min_bytes`` with no ``input_output_alias``
+    entry, while an identically-shaped un-aliased output exists, is a
+    buffer the caller consumes and re-materializes every dispatch
+    (e.g. the paged cache threaded through reset / prefill_chunk /
+    decode_chunk): donating it halves the buffer's peak live copies.
+    Persistent inputs with no matching output (model params) are not
+    flagged — there is nothing to alias them onto.
+
+    ``allow`` maps a normalized shape (e.g. ``"f32[4,2,24,16,16]"``) to
+    a one-line justification for deliberately un-donated buffers.
+    """
+    params, outs = entry_params_and_outputs(hlo_text)
+    donated = donated_params(hlo_text)
+    free_outputs: Dict[str, int] = {}
+    aliased_out_idx = set(donated.values())
+    for i, shape in enumerate(outs):
+        if i not in aliased_out_idx:
+            free_outputs[shape] = free_outputs.get(shape, 0) + 1
+    findings: List[Finding] = []
+    for i, shape in enumerate(params):
+        if i in donated:
+            continue
+        size = _shape_bytes(shape)
+        if size < min_bytes:
+            continue
+        if allow and shape in allow:
+            continue
+        if free_outputs.get(shape, 0) > 0:
+            free_outputs[shape] -= 1
+            findings.append(Finding(
+                rule="undonated-buffer", path=label, line=0,
+                message=f"parameter {i} ({shape}, {size} B) passes "
+                        "through un-donated — an identically-shaped "
+                        "output exists, so donate_argnums would alias "
+                        "it and drop one live copy per dispatch"))
+    return findings
+
+
+def donation_report(compiled) -> Dict[str, int]:
+    """Measured donation effect of one compiled dispatch, from XLA's
+    buffer assignment: ``alias_bytes`` is what donation saves, and
+    ``peak_live_bytes`` is argument + output + temp − alias (what the
+    same dispatch would hold live without donation is
+    ``peak_live_bytes_undonated``)."""
+    m = compiled.memory_analysis()
+    arg = int(getattr(m, "argument_size_in_bytes", 0))
+    out = int(getattr(m, "output_size_in_bytes", 0))
+    tmp = int(getattr(m, "temp_size_in_bytes", 0))
+    alias = int(getattr(m, "alias_size_in_bytes", 0))
+    return {
+        "argument_bytes": arg,
+        "output_bytes": out,
+        "temp_bytes": tmp,
+        "alias_bytes": alias,
+        "peak_live_bytes": arg + out + tmp - alias,
+        "peak_live_bytes_undonated": arg + out + tmp,
+    }
+
+
+# ---------------------------------------------------------------------------
+# jit-cache-growth guard
+# ---------------------------------------------------------------------------
+def jit_cache_findings(*, prefill_traces: int, prefill_pages: int,
+                       decode_traces: int, distinct_decode_steps: int,
+                       label: str = "engine") -> List[Finding]:
+    """The engine's compile counts against its own bucketing contract:
+    power-of-two ``ctx_pages`` bucketing bounds prefill variants at
+    log2(prefill_pages) + 1, and the decode chunk compiles once per
+    distinct static ``steps`` value.  Anything beyond is unbounded
+    jit-cache growth — a serving memory leak."""
+    findings: List[Finding] = []
+    bound = max(prefill_pages, 1).bit_length() + 1
+    if prefill_traces > bound:
+        findings.append(Finding(
+            rule="jit-cache-growth", path=label, line=0,
+            message=f"{prefill_traces} prefill compilations for "
+                    f"{prefill_pages} prefill pages (bucketing bound: "
+                    f"{bound}) — ctx_pages bucketing is broken"))
+    if decode_traces > max(distinct_decode_steps, 1):
+        findings.append(Finding(
+            rule="jit-cache-growth", path=label, line=0,
+            message=f"{decode_traces} decode-chunk compilations for "
+                    f"{distinct_decode_steps} distinct chunk lengths — "
+                    "a non-static argument is leaking into the trace"))
+    return findings

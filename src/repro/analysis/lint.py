@@ -1,0 +1,331 @@
+"""AST lint over ``src/``: the repo's kernel / serving contracts as
+named, suppressible rules.
+
+Rules (stable ids — suppressions and CI reference them):
+
+``pallas-call-outside-kernels``
+    ``pl.pallas_call`` may appear only under ``kernels/``.  Everything
+    above the kernel layer talks to Pallas through ``kernels.ops``, so
+    the zero-copy HLO regressions watch one module, not the whole tree.
+``pallas-missing-interpret``
+    Every raw Pallas entry (``pallas_call`` itself, and any call to a
+    ``*_pallas`` kernel wrapper) must thread an explicit ``interpret=``
+    kwarg.  ``ops.py`` alone maps ``impl`` to an execution mode; a call
+    that omits the kwarg could silently run interpreted on TPU.
+``host-sync-in-dispatch-loop``
+    Inside ``serving/``: no ``.item()`` / ``jax.device_get`` anywhere,
+    and no ``np.asarray`` / ``float()`` / ``int()`` / ``bool()`` *of a
+    jnp expression* inside a ``for``/``while`` body.  The engine syncs
+    host state once per dispatch at chunk boundaries — a per-lane
+    round-trip in a loop serializes the device queue.
+``paged-gather-outside-kernels``
+    No fancy-index (advanced) subscript load of the paged-cache KV
+    arrays (``k_pages`` / ``v_pages``) outside ``kernels/``.  Page
+    selection reaches the kernels as an i32 index table; a gather
+    anywhere else re-materializes KV bytes the kernels exist to avoid.
+``policy-imports``
+    Files in ``core/policies/`` import only ``policy_base`` (plus
+    sibling policies, jax/numpy and the stdlib).  A policy is one
+    self-contained file; reaching into cache or engine internals
+    couples it to layouts the registry promises to insulate it from.
+
+Suppression syntax — on the offending line, or a standalone comment on
+the line directly above::
+
+    x = cache.k_pages[b, :, slots]  # analysis: allow=<rule-id> -- <one-line why>
+
+The justification after ``--`` is mandatory (``bare-suppression``
+otherwise); a suppression that no finding consumed is itself reported
+(``unused-suppression``), so stale exemptions cannot linger.
+"""
+from __future__ import annotations
+
+import ast
+import re
+from pathlib import Path
+from typing import Dict, Iterator, List, Optional, Sequence, Tuple
+
+from repro.analysis.findings import Finding
+
+RULES = (
+    "pallas-call-outside-kernels",
+    "pallas-missing-interpret",
+    "host-sync-in-dispatch-loop",
+    "paged-gather-outside-kernels",
+    "policy-imports",
+)
+
+_SUPPRESS_RE = re.compile(
+    r"#\s*analysis:\s*allow=([\w-]+)(?:\s*--\s*(\S.*))?")
+
+_PAGED_ARRAYS = ("k_pages", "v_pages")
+_POLICY_IMPORT_OK = ("__future__", "typing", "dataclasses", "functools",
+                     "math", "jax", "numpy",
+                     "repro.core.policy_base", "repro.core.policies")
+
+
+def _terminal_name(node: ast.expr) -> Optional[str]:
+    """'pallas_call' for ``pl.pallas_call`` / ``pallas_call``."""
+    if isinstance(node, ast.Attribute):
+        return node.attr
+    if isinstance(node, ast.Name):
+        return node.id
+    return None
+
+
+def _dotted_name(node: ast.expr) -> Optional[str]:
+    """'jax.device_get' for a pure Name/Attribute chain, else None."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def _mentions_jnp(node: ast.expr) -> bool:
+    """Does the expression subtree touch ``jnp.*`` (a device value)?"""
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Name) and sub.id == "jnp":
+            return True
+    return False
+
+
+def _is_advanced_index(sl: ast.expr) -> bool:
+    """Advanced (fancy) indexing: any index element that is not a
+    slice / constant scalar — a Name, Call or array expression there
+    makes XLA gather."""
+    elems = sl.elts if isinstance(sl, ast.Tuple) else [sl]
+    for e in elems:
+        if isinstance(e, ast.Slice):
+            continue
+        if isinstance(e, ast.Constant):
+            continue
+        if isinstance(e, ast.UnaryOp) and isinstance(e.operand,
+                                                     ast.Constant):
+            continue
+        return True
+    return False
+
+
+class _FileLint:
+    def __init__(self, path: Path, rel: str, src: str):
+        self.path = path
+        self.rel = rel                        # posix path relative to root
+        self.parts = tuple(Path(rel).parts)
+        self.src_lines = src.splitlines()
+        self.tree = ast.parse(src, filename=str(path))
+        self.findings: List[Finding] = []
+
+    # -- helpers -----------------------------------------------------------
+    def _emit(self, rule: str, node: ast.AST, message: str) -> None:
+        line = getattr(node, "lineno", 0)
+        span = self.src_lines[line - 1].strip() if line else ""
+        self.findings.append(Finding(rule=rule, path=self.rel, line=line,
+                                     message=message, span=span))
+
+    @property
+    def in_kernels(self) -> bool:
+        return "kernels" in self.parts
+
+    @property
+    def in_serving(self) -> bool:
+        return "serving" in self.parts
+
+    @property
+    def is_policy_file(self) -> bool:
+        return ("policies" in self.parts
+                and self.parts[-1] != "__init__.py")
+
+    # -- walk --------------------------------------------------------------
+    def run(self) -> List[Finding]:
+        if self.is_policy_file:
+            self._check_policy_imports()
+        self._walk(self.tree, loop_depth=0)
+        return self.findings
+
+    def _walk(self, node: ast.AST, loop_depth: int) -> None:
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, ast.Call):
+                self._check_call(child, loop_depth)
+            d = loop_depth + (1 if isinstance(child,
+                                              (ast.For, ast.While)) else 0)
+            if isinstance(child, ast.Subscript) \
+                    and isinstance(child.ctx, ast.Load):
+                self._check_subscript(child)
+            self._walk(child, d)
+
+    # -- rules -------------------------------------------------------------
+    def _check_call(self, call: ast.Call, loop_depth: int) -> None:
+        name = _terminal_name(call.func)
+        if name is None:
+            return
+        kwargs = {kw.arg for kw in call.keywords}
+        if name == "pallas_call" and not self.in_kernels:
+            self._emit("pallas-call-outside-kernels", call,
+                       "pallas_call outside kernels/ — raw kernels live "
+                       "under kernels/ and are reached via kernels.ops")
+        if (name == "pallas_call" or name.endswith("_pallas")) \
+                and "interpret" not in kwargs:
+            self._emit("pallas-missing-interpret", call,
+                       f"raw Pallas entry `{name}` called without an "
+                       "explicit interpret= kwarg (ops.py alone picks "
+                       "the execution mode)")
+        if name == "take_along_axis" or name == "take":
+            for arg in call.args[:1]:
+                t = _terminal_name(arg)
+                if t in _PAGED_ARRAYS and not self.in_kernels:
+                    self._emit("paged-gather-outside-kernels", call,
+                               f"jnp.{name} on PagedCache array `{t}` "
+                               "outside kernels/ — selection must reach "
+                               "the kernel as an index table")
+        if self.in_serving:
+            self._check_host_sync(call, name, loop_depth)
+
+    def _check_host_sync(self, call: ast.Call, name: str,
+                         loop_depth: int) -> None:
+        dotted = _dotted_name(call.func)
+        if name == "item" and isinstance(call.func, ast.Attribute) \
+                and not call.args:
+            self._emit("host-sync-in-dispatch-loop", call,
+                       ".item() in serving code — a blocking device "
+                       "round-trip; sync whole arrays once per dispatch")
+            return
+        if dotted == "jax.device_get":
+            self._emit("host-sync-in-dispatch-loop", call,
+                       "jax.device_get in serving code — transfer whole "
+                       "chunk outputs at the dispatch boundary instead")
+            return
+        if loop_depth == 0:
+            return
+        sync = dotted in ("np.asarray", "numpy.asarray") \
+            or (isinstance(call.func, ast.Name)
+                and call.func.id in ("float", "int", "bool"))
+        if sync and call.args and _mentions_jnp(call.args[0]):
+            self._emit("host-sync-in-dispatch-loop", call,
+                       f"`{dotted or _terminal_name(call.func)}` of a jnp "
+                       "value inside a loop — one host sync per "
+                       "iteration; batch the transfer outside the loop")
+
+    def _check_subscript(self, sub: ast.Subscript) -> None:
+        if self.in_kernels:
+            return
+        t = _terminal_name(sub.value)
+        if t not in _PAGED_ARRAYS:
+            return
+        if _is_advanced_index(sub.slice):
+            self._emit("paged-gather-outside-kernels", sub,
+                       f"fancy-index gather on PagedCache array `{t}` "
+                       "outside kernels/ — pages must reach the kernels "
+                       "as indices, never as a copied tensor")
+
+    def _check_policy_imports(self) -> None:
+        for node in self._runtime_imports(self.tree):
+            if isinstance(node, ast.Import):
+                mods = [a.name for a in node.names]
+            else:
+                if node.level > 0:
+                    # relative import inside core/policies/ stays inside
+                    # the package (or one level up = core.policy_base)
+                    mod = node.module or ""
+                    if node.level == 1 or mod.startswith("policy_base"):
+                        continue
+                    mods = [f"<rel:{'.' * node.level}{mod}>"]
+                else:
+                    mods = [node.module or ""]
+            for mod in mods:
+                if any(mod == ok or mod.startswith(ok + ".")
+                       for ok in _POLICY_IMPORT_OK):
+                    continue
+                self._emit("policy-imports", node,
+                           f"policy file imports `{mod}` — policies may "
+                           "import only policy_base (and sibling "
+                           "policies); shared constants belong on "
+                           "policy_base")
+
+    def _runtime_imports(self, tree: ast.Module) -> Iterator[ast.stmt]:
+        """Module-level imports outside ``if TYPE_CHECKING:`` blocks."""
+        for node in tree.body:
+            if isinstance(node, (ast.Import, ast.ImportFrom)):
+                yield node
+            elif isinstance(node, ast.If):
+                test = node.test
+                is_tc = (isinstance(test, ast.Name)
+                         and test.id == "TYPE_CHECKING") \
+                    or (isinstance(test, ast.Attribute)
+                        and test.attr == "TYPE_CHECKING")
+                if not is_tc:
+                    for sub in node.body:
+                        if isinstance(sub, (ast.Import, ast.ImportFrom)):
+                            yield sub
+
+
+# ---------------------------------------------------------------------------
+# suppressions
+# ---------------------------------------------------------------------------
+def _suppressions(src_lines: Sequence[str]
+                  ) -> Dict[int, Tuple[str, str]]:
+    """line -> (rule, justification) for every allow marker."""
+    out: Dict[int, Tuple[str, str]] = {}
+    for i, line in enumerate(src_lines, start=1):
+        m = _SUPPRESS_RE.search(line)
+        if m:
+            out[i] = (m.group(1), (m.group(2) or "").strip())
+    return out
+
+
+def _apply_suppressions(findings: List[Finding], rel: str,
+                        src_lines: Sequence[str]) -> List[Finding]:
+    """Drop findings covered by a justified allow marker; report bare,
+    unknown and unused markers as findings themselves."""
+    sup = _suppressions(src_lines)
+    used = set()
+    kept: List[Finding] = []
+    for f in findings:
+        covering = None
+        if f.line in sup and sup[f.line][0] == f.rule:
+            covering = f.line
+        else:
+            prev = f.line - 1
+            if prev in sup and sup[prev][0] == f.rule \
+                    and src_lines[prev - 1].lstrip().startswith("#"):
+                covering = prev
+        if covering is not None and sup[covering][1]:
+            used.add(covering)
+        else:
+            kept.append(f)
+    for line, (rule, why) in sorted(sup.items()):
+        span = src_lines[line - 1].strip()
+        if rule not in RULES:
+            kept.append(Finding("unknown-suppression", rel, line,
+                                f"allow marker names unknown rule "
+                                f"`{rule}`", span))
+        elif not why:
+            kept.append(Finding("bare-suppression", rel, line,
+                                f"allow={rule} without a justification "
+                                "— add `-- <why this is safe>`", span))
+        elif line not in used:
+            kept.append(Finding("unused-suppression", rel, line,
+                                f"allow={rule} suppresses nothing — "
+                                "remove the stale marker", span))
+    return kept
+
+
+# ---------------------------------------------------------------------------
+# entry points
+# ---------------------------------------------------------------------------
+def lint_file(path: Path, root: Path) -> List[Finding]:
+    rel = path.relative_to(root).as_posix()
+    src = path.read_text()
+    findings = _FileLint(path, rel, src).run()
+    return _apply_suppressions(findings, rel, src.splitlines())
+
+
+def lint_tree(root: Path) -> List[Finding]:
+    """Lint every ``*.py`` under ``root`` (the ``src/repro`` package)."""
+    findings: List[Finding] = []
+    for path in sorted(root.rglob("*.py")):
+        findings.extend(lint_file(path, root))
+    return findings

@@ -1,0 +1,166 @@
+"""``python -m repro.analysis.run`` — the whole static-analysis suite.
+
+Layer 1 lints every module under ``src/repro`` (AST contracts, see
+:mod:`repro.analysis.lint`).  Layer 2 compiles the serving engine's
+jitted dispatches over a small config matrix (policy x dispatch, tiny
+dense arch — the same shapes the serving tests pin down) and runs the
+:mod:`repro.analysis.hlo` passes on each optimized program: KV-sized
+copies, host transfers, collective traffic, the donation audit, plus
+the jit-cache-growth guard over a real mini-workload's trace counters.
+
+``--strict`` (the CI ``static-analysis`` leg) exits non-zero on any
+finding.  ``--json`` dumps findings + the per-dispatch donation report
+for dashboards.
+
+The RaaS row deliberately skips the KV-copy pass: a RaaS policy's
+cache is O(L) — its *selection* is the whole (small) cache, so the jnp
+oracle's O(selection) decode gather is cache-sized by design, and one
+prefill chunk's inherent attention intermediates (chunk x ctx) already
+exceed the budgeted cache, so a cache-sized threshold cannot
+discriminate.  The quest row, whose O(N) cache strictly dominates both,
+carries the copy-size regression; donation / host-transfer /
+collective passes still run on every row.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.analysis import engine_audit, hlo, lint
+from repro.analysis.findings import Finding, format_findings
+
+# tiny dense arch: the analysis matrix needs real engine dispatches,
+# not a real model — same scale as the serving tests' TINY config.
+_GEOMETRY = dict(batch_slots=4, max_seq=256, max_prefill=64,
+                 prefill_chunk=16, chunk_steps=4)
+_PAGE_SIZE = 16
+_BUDGET = 64
+DEFAULT_POLICIES = ("quest", "raas")
+
+
+def _tiny_cfg():
+    from repro.config import ModelConfig
+    return ModelConfig(name="analysis-tiny", arch_type="dense",
+                       n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+                       d_ff=128, vocab_size=128, head_dim=16)
+
+
+def _mini_workload(eng, rng) -> None:
+    """Serve a few multi-chunk prompts so the trace counters reflect a
+    real schedule (prefill bucketing + decode chunks)."""
+    from repro.serving.engine import Request
+    from repro.serving.scheduler import serve
+    reqs = [Request(uid=i, prompt=rng.integers(
+        0, 128, size=n).astype(np.int32), max_new_tokens=5)
+        for i, n in enumerate((40, 9, 33))]
+    done = serve(eng, reqs)
+    assert len(done) == len(reqs)
+
+
+def analyze_engine_matrix(policies=DEFAULT_POLICIES,
+                          min_donate_bytes: int = 1 << 16,
+                          ) -> Tuple[List[Finding], Dict[str, Dict]]:
+    """Compile + analyze the engine dispatch matrix; returns (findings,
+    per-(policy, dispatch) donation/collective report)."""
+    import jax
+    from repro.config import RaasConfig
+    from repro.models import model as M
+    from repro.serving.engine import Engine
+
+    cfg = _tiny_cfg()
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    findings: List[Finding] = []
+    report: Dict[str, Dict] = {}
+    for policy in policies:
+        raas = RaasConfig(policy=policy, budget_tokens=_BUDGET,
+                          page_size=_PAGE_SIZE, quest_topk_pages=3)
+        eng = Engine(params, cfg, raas, **_GEOMETRY)
+        _mini_workload(eng, np.random.default_rng(0))
+        # trace counters BEFORE the audit: AOT lowering re-traces
+        findings.extend(hlo.jit_cache_findings(
+            prefill_traces=eng.prefill_traces,
+            prefill_pages=eng.prefill_pages,
+            decode_traces=eng.traces, distinct_decode_steps=1,
+            label=f"engine[{policy}]"))
+        thresholds = None
+        if policy == "raas":
+            thresholds = {"decode_chunk": 0, "prefill_chunk": 0}
+        fs, rep = engine_audit.audit_engine(
+            eng, min_donate_bytes=min_donate_bytes,
+            kv_copy_min_elems=thresholds)
+        findings.extend(Finding(f.rule, f"engine[{policy}]:{f.path}",
+                                f.line, f.message, f.span) for f in fs)
+        for name, r in rep.items():
+            report[f"{policy}/{name}"] = r
+    return findings, report
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis.run",
+        description="repo static analysis: AST lint + compiled-HLO "
+                    "invariant passes + donation audit")
+    ap.add_argument("--strict", action="store_true",
+                    help="exit non-zero on any finding (the CI leg)")
+    ap.add_argument("--skip-hlo", action="store_true",
+                    help="lint only — skip engine compilation passes")
+    ap.add_argument("--root", default=None,
+                    help="package root to lint (default: the installed "
+                         "repro package)")
+    ap.add_argument("--policies", default=",".join(DEFAULT_POLICIES),
+                    help="engine-matrix policies (comma list)")
+    ap.add_argument("--min-donate-bytes", type=int, default=1 << 16,
+                    help="donation-audit size floor (default 64 KiB)")
+    ap.add_argument("--json", default=None,
+                    help="write findings + donation report as JSON")
+    args = ap.parse_args(argv)
+
+    if args.root is None:
+        import repro
+        root = Path(repro.__file__).resolve().parent
+    else:
+        root = Path(args.root).resolve()
+
+    lint_findings = lint.lint_tree(root)
+    print(f"lint: {len(list(root.rglob('*.py')))} files under {root} — "
+          f"{len(lint_findings)} finding(s)", flush=True)
+
+    hlo_findings: List[Finding] = []
+    report: Dict[str, Dict] = {}
+    if not args.skip_hlo:
+        policies = tuple(p for p in args.policies.split(",") if p)
+        hlo_findings, report = analyze_engine_matrix(
+            policies, min_donate_bytes=args.min_donate_bytes)
+        print(f"hlo: engine matrix {policies} x "
+              f"{engine_audit.DISPATCHES} — {len(hlo_findings)} "
+              "finding(s)", flush=True)
+        for key, rep in sorted(report.items()):
+            print(f"  {key}: alias={rep['alias_bytes']} B "
+                  f"peak_live={rep['peak_live_bytes']} B "
+                  f"(undonated would be "
+                  f"{rep['peak_live_bytes_undonated']} B), "
+                  f"collectives={rep['collective_bytes']:.0f} B",
+                  flush=True)
+
+    findings = lint_findings + hlo_findings
+    if findings:
+        print(format_findings(findings), flush=True)
+    else:
+        print("OK: no findings", flush=True)
+
+    if args.json:
+        Path(args.json).write_text(json.dumps({
+            "findings": [vars(f) for f in findings],
+            "donation_report": report,
+        }, indent=2) + "\n")
+
+    return 1 if (args.strict and findings) else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

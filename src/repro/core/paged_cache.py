@@ -274,10 +274,10 @@ def ingest_prefill_chunk(cache: PagedCache, k: jnp.ndarray, v: jnp.ndarray,
     w5 = write[:, :, None, None, None]
     k_pages = cache.k_pages.at[bidx, :, slots].set(
         jnp.where(w5, kw.astype(cache.k_pages.dtype),
-                  cache.k_pages[bidx, :, slots]))
+                  cache.k_pages[bidx, :, slots]))  # analysis: allow=paged-gather-outside-kernels -- read half of the masked chunk-write RMW: O(chunk pages), owner module
     v_pages = cache.v_pages.at[bidx, :, slots].set(
         jnp.where(w5, vw.astype(cache.v_pages.dtype),
-                  cache.v_pages[bidx, :, slots]))
+                  cache.v_pages[bidx, :, slots]))  # analysis: allow=paged-gather-outside-kernels -- read half of the masked chunk-write RMW: O(chunk pages), owner module
     w4 = write[:, :, None, None]
     rep_min = cache.rep_min.at[bidx, :, slots].set(
         jnp.where(w4, rmin_new, cache.rep_min[bidx, :, slots]))
@@ -395,10 +395,10 @@ def append_token(cache: PagedCache, k_new: jnp.ndarray, v_new: jnp.ndarray,
     # zero the KV of a reset page so stale tokens can't leak through
     k_pages = cache.k_pages.at[barange, :, slot].set(
         jnp.where(need_alloc[:, None, None, None], 0,
-                  cache.k_pages[barange, :, slot]))
+                  cache.k_pages[barange, :, slot]))  # analysis: allow=paged-gather-outside-kernels -- page-reset RMW reads exactly one page per lane, owner module
     v_pages = cache.v_pages.at[barange, :, slot].set(
         jnp.where(need_alloc[:, None, None, None], 0,
-                  cache.v_pages[barange, :, slot]))
+                  cache.v_pages[barange, :, slot]))  # analysis: allow=paged-gather-outside-kernels -- page-reset RMW reads exactly one page per lane, owner module
 
     # masked lanes write their existing byte back at a safe offset —
     # a bit-exact no-op — so the scatter shape stays static.
@@ -406,10 +406,10 @@ def append_token(cache: PagedCache, k_new: jnp.ndarray, v_new: jnp.ndarray,
     w3 = wm[:, None, None]                     # [B,1,1] vs [B,KV,hd]
     k_pages = k_pages.at[barange, :, slot, offset].set(
         jnp.where(w3, k_new.astype(k_pages.dtype),
-                  k_pages[barange, :, slot, offset]))
+                  k_pages[barange, :, slot, offset]))  # analysis: allow=paged-gather-outside-kernels -- single-token append RMW reads one [KV,hd] row per lane, owner module
     v_pages = v_pages.at[barange, :, slot, offset].set(
         jnp.where(w3, v_new.astype(v_pages.dtype),
-                  v_pages[barange, :, slot, offset]))
+                  v_pages[barange, :, slot, offset]))  # analysis: allow=paged-gather-outside-kernels -- single-token append RMW reads one [KV,hd] row per lane, owner module
     # +/-INF are the identity elements of the running min/max
     rep_min = rep_min.at[barange, :, slot].min(
         jnp.where(w3, k_new.astype(jnp.float32), INF))

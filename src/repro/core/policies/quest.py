@@ -11,8 +11,7 @@ from typing import TYPE_CHECKING, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core.paged_cache import INF
-from repro.core.policy_base import SparsityPolicy, register_policy
+from repro.core.policy_base import INF, SparsityPolicy, register_policy
 
 if TYPE_CHECKING:
     from repro.config import RaasConfig

@@ -58,6 +58,11 @@ from typing import TYPE_CHECKING, Dict, NamedTuple, Optional, Tuple, Type
 
 import jax.numpy as jnp
 
+# Re-exported for policies: the shared masked-score sentinel.  Policies
+# import constants from here, never from paged_cache directly (the
+# `policy-imports` lint rule), so the cache layout stays encapsulated.
+from repro.core.paged_cache import INF as INF  # noqa: F401
+
 if TYPE_CHECKING:  # type-only; avoids an import cycle with repro.config
     from repro.config import RaasConfig
     from repro.core.paged_cache import PagedCache

@@ -32,7 +32,8 @@ from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
 
 from repro.config import (INPUT_SHAPES, ModelConfig, RaasConfig,  # noqa: E402
                           RunConfig, get_config, list_archs)
-from repro.launch import hlo_analysis, mesh as mesh_lib, shardings  # noqa: E402
+from repro.analysis import hlo as hlo_analysis  # noqa: E402
+from repro.launch import mesh as mesh_lib, shardings  # noqa: E402
 from repro.launch.train import make_train_step  # noqa: E402
 from repro.models import model as M  # noqa: E402
 from repro.optim import adamw  # noqa: E402

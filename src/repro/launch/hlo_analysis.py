@@ -1,107 +1,26 @@
-"""Parse collective traffic and roofline terms out of compiled HLO.
+"""Back-compat shim: the HLO passes grew into a framework and moved to
+:mod:`repro.analysis.hlo` (collective accounting + roofline here began
+as launch-time helpers; the analysis package added KV-copy,
+host-transfer, donation and jit-cache passes on top).
 
-``collective_bytes`` scans the optimized (post-SPMD) HLO text for
-all-gather / all-reduce / reduce-scatter / all-to-all /
-collective-permute ops, reconstructs per-device link traffic from the
-result shape and the replica-group size, and returns totals per
-collective kind.
-
-Ring-model bytes-on-the-wire per device, for group size g and result
-payload R bytes:
-  all-gather          (g-1)/g * R        (R is the gathered result)
-  all-reduce          2*(g-1)/g * R      (reduce-scatter + all-gather)
-  reduce-scatter      (g-1) * R          (R is the scattered result)
-  all-to-all          (g-1)/g * R
-  collective-permute  R
+Launch-time callers (``launch/dryrun.py``) and older tests import
+through this module; new code should import :mod:`repro.analysis.hlo`
+directly.
 """
 from __future__ import annotations
 
-import re
-from typing import Dict, Tuple
+from repro.analysis.hlo import (  # noqa: F401
+    HBM_BW,
+    ICI_BW,
+    PEAK_FLOPS_BF16,
+    _group_size,
+    _shape_bytes,
+    collective_bytes,
+    count_collectives,
+    roofline_terms,
+)
 
-_DTYPE_BYTES = {
-    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
-    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
-    "c64": 8, "c128": 16,
-}
-
-_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
-_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
-                "collective-permute")
-
-
-def _shape_bytes(shape_str: str) -> int:
-    total = 0
-    for dt, dims in _SHAPE_RE.findall(shape_str):
-        if dt not in _DTYPE_BYTES:
-            continue
-        n = 1
-        for d in dims.split(","):
-            if d:
-                n *= int(d)
-        total += n * _DTYPE_BYTES[dt]
-    return total
-
-
-def _group_size(line: str) -> int:
-    m = re.search(r"replica_groups=\{\{([^}]*)\}", line)
-    if m:
-        return max(1, len(m.group(1).split(",")))
-    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", line)
-    if m:  # iota format [num_groups, group_size]
-        return max(1, int(m.group(2)))
-    return 1
-
-
-def collective_bytes(hlo_text: str) -> Dict[str, float]:
-    """Per-device link bytes by collective kind + 'total'."""
-    out: Dict[str, float] = {k: 0.0 for k in _COLLECTIVES}
-    for line in hlo_text.splitlines():
-        s = line.strip()
-        m = re.match(r"(?:ROOT\s+)?%?[\w\.\-]+\s*=\s*(\(?[^=]*?)\s*"
-                     r"(all-gather|all-reduce|reduce-scatter|all-to-all|"
-                     r"collective-permute)(-start|-done)?\(", s)
-        if not m:
-            continue
-        shape_str, kind, phase = m.group(1), m.group(2), m.group(3)
-        if phase == "-done":
-            continue  # counted at -start
-        payload = _shape_bytes(shape_str)
-        g = _group_size(s)
-        if g <= 1 and kind != "collective-permute":
-            continue
-        if kind == "all-gather":
-            traffic = payload * (g - 1) / g
-        elif kind == "all-reduce":
-            traffic = payload * 2 * (g - 1) / g
-        elif kind == "reduce-scatter":
-            traffic = payload * (g - 1)
-        elif kind == "all-to-all":
-            traffic = payload * (g - 1) / g
-        else:
-            traffic = payload
-        out[kind] += traffic
-    out["total"] = sum(out[k] for k in _COLLECTIVES)
-    return out
-
-
-def count_collectives(hlo_text: str) -> Dict[str, int]:
-    counts: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
-    for kind in _COLLECTIVES:
-        counts[kind] = len(re.findall(rf"\b{kind}(?:-start)?\(", hlo_text))
-    return counts
-
-
-# v5e hardware model (per chip)
-PEAK_FLOPS_BF16 = 197e12        # FLOP/s
-HBM_BW = 819e9                  # B/s
-ICI_BW = 50e9                   # B/s per link
-
-
-def roofline_terms(flops_per_device: float, bytes_per_device: float,
-                   coll_bytes_per_device: float) -> Dict[str, float]:
-    return {
-        "compute_s": flops_per_device / PEAK_FLOPS_BF16,
-        "memory_s": bytes_per_device / HBM_BW,
-        "collective_s": coll_bytes_per_device / ICI_BW,
-    }
+__all__ = [
+    "HBM_BW", "ICI_BW", "PEAK_FLOPS_BF16",
+    "collective_bytes", "count_collectives", "roofline_terms",
+]

@@ -291,20 +291,29 @@ class Engine:
                                   max_seq=self.max_seq, impl=impl_,
                                   policy=policy)
 
-        self._reset_fn = jax.jit(_reset, **_out(cache_shd))
+        # every chunked dispatch donates its input cache: the engine
+        # always rebinds self.cache to the dispatch output, so the old
+        # buffer is dead the moment the call is issued — donation lets
+        # XLA alias it in place instead of holding cache x2 live
+        # (repro.analysis's donation audit enforces this stays true)
+        self._reset_fn = jax.jit(_reset, donate_argnums=(0,),
+                                 **_out(cache_shd))
         self._prefill_chunk_fn = jax.jit(
             _prefill_chunk, static_argnames=("ctx_pages",),
+            donate_argnums=(1,),
             **_out(cache_shd, self._lane2_shd
                    if mesh is not None else None))
         self._prefill_fn = _prefill_oneshot
         self._chunk_fn = jax.jit(
             _chunk, static_argnames=("steps",),
+            donate_argnums=(1,),
             **_out(cache_shd,
                    M.chunk_result_sharding(self._lane_shd, self._step_shd)
                    if mesh is not None else None))
         # one-shot fallback path keeps a single device-resident template
-        # row (built once; the jitted prefill never donates it, so it is
-        # reused for every admission — no per-request re-materialization)
+        # row (built once; the jitted one-shot prefill deliberately does
+        # NOT donate it — the row is a reusable template spliced into
+        # self.cache host-side, so it must survive every admission)
         self._fresh_row = None
         if not self.chunked_prefill:
             self._fresh_row = M.init_model_cache(
@@ -499,7 +508,7 @@ class Engine:
             self.prefill_pos[slot] = L
             # axis=-1 keeps multi-codebook logits [C, V] sampling a
             # codebook-0 token id, not a flattened [C*V] index
-            nxt = int(jnp.argmax(logits[0], axis=-1).reshape(-1)[0])
+            nxt = int(jnp.argmax(logits[0], axis=-1).reshape(-1)[0])  # analysis: allow=host-sync-in-dispatch-loop -- one-shot fallback runs one prefill dispatch per lane; this sync matches dispatch granularity
             req2 = self._start_decode(slot, nxt)
             if req2 is not None:
                 finished.append(req2)

@@ -1,0 +1,6 @@
+"""Fixture: fancy-index gather on a PagedCache KV array outside
+kernels/ — exactly one finding."""
+
+
+def gather(k_pages, sel):
+    return k_pages[sel]  # FIRE

@@ -1,0 +1,7 @@
+"""Fixture: raw pallas_call outside kernels/.  interpret= is threaded
+so only the location rule fires — exactly one finding."""
+from jax.experimental import pallas as pl
+
+
+def run(kernel, x):
+    return pl.pallas_call(kernel, out_shape=x, interpret=False)(x)  # FIRE

@@ -1,0 +1,7 @@
+"""Fixture: a policy file importing engine internals — exactly one
+finding (policies import policy_base and siblings only)."""
+from repro.serving.engine import Engine  # FIRE
+
+
+class BadPolicy:
+    engine_cls = Engine

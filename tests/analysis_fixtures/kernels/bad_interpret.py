@@ -1,0 +1,7 @@
+"""Fixture: pallas_call inside kernels/ (location rule silent) but
+without an explicit interpret= kwarg — exactly one finding."""
+from jax.experimental import pallas as pl
+
+
+def run(kernel, x):
+    return pl.pallas_call(kernel, out_shape=x)(x)  # FIRE

@@ -1,0 +1,10 @@
+"""Fixture: per-iteration host sync inside a serving loop — exactly
+one finding (the same float() outside the loop would be clean)."""
+import jax.numpy as jnp
+
+
+def drain(chunks):
+    total = 0.0
+    for c in chunks:
+        total += float(jnp.sum(c))  # FIRE
+    return total

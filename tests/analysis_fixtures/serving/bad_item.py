@@ -1,0 +1,6 @@
+"""Fixture: .item() anywhere in serving code — exactly one finding
+(blocking scalar round-trip; loops are not required)."""
+
+
+def peek(x):
+    return x.item()  # FIRE

@@ -1,0 +1,6 @@
+"""Fixture: an allow marker without a justification — the original
+finding stays AND a bare-suppression finding is added."""
+
+
+def gather(k_pages, sel):
+    return k_pages[sel]  # analysis: allow=paged-gather-outside-kernels

@@ -1,0 +1,6 @@
+"""Fixture: an allow marker naming a rule that does not exist — one
+unknown-suppression finding."""
+
+
+def clean(x):
+    return x + 1  # analysis: allow=not-a-real-rule -- fixture: typo'd rule id

@@ -1,0 +1,7 @@
+"""Fixture: a justified marker that suppresses nothing — one
+unused-suppression finding, so stale exemptions cannot linger."""
+
+
+def clean(x):
+    # analysis: allow=paged-gather-outside-kernels -- fixture: nothing to suppress here
+    return x + 1

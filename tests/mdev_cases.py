@@ -106,7 +106,7 @@ def case_no_cache_gather():
     the sharded engine and never serves (cheap in both CI legs)."""
     import jax
     from repro.config import RaasConfig
-    from repro.launch import hlo_analysis as H
+    from repro.analysis import hlo as H
     from repro.launch import mesh as mesh_lib
     from repro.models import model as M
     from repro.serving.engine import Engine
@@ -156,7 +156,7 @@ def case_hlo_collectives_roundtrip():
     import jax
     import jax.numpy as jnp
     from jax.sharding import NamedSharding, PartitionSpec as P
-    from repro.launch import hlo_analysis as H
+    from repro.analysis import hlo as H
     from repro.launch import mesh as mesh_lib
 
     assert jax.device_count() >= 2, "needs >1 device (forced host devs)"

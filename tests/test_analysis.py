@@ -1,0 +1,242 @@
+"""The static-analysis suite, tested against itself.
+
+Three layers of coverage:
+
+1.  **Lint fixtures** — one tiny file per rule under
+    ``tests/analysis_fixtures/`` (the fixture tree mimics the package
+    layout, since rules are path-scoped).  Each violation fixture must
+    produce *exactly one* finding, with the right rule id and the right
+    line (the ``# FIRE`` marker); the suppression fixtures pin the
+    allow-marker contract (justified suppresses, bare/unknown/unused
+    are themselves findings).
+2.  **HLO passes** — synthetic HLO snippets per pass, plus donation
+    headers from really-compiled jitted functions.
+3.  **The repo itself** — ``lint_tree`` over ``src/repro`` is clean,
+    and the serving engine's jitted dispatches pass the full audit with
+    the KV cache donated (alias bytes >= one full cache).
+"""
+import sys
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis import engine_audit, hlo as H, lint, run as cli
+from repro.analysis.findings import Finding
+
+FIXTURES = Path(__file__).parent / "analysis_fixtures"
+SRC_ROOT = Path(__file__).parents[1] / "src" / "repro"
+
+
+def _fire_line(path: Path) -> int:
+    for i, line in enumerate(path.read_text().splitlines(), start=1):
+        if line.rstrip().endswith("# FIRE"):
+            return i
+    raise AssertionError(f"no # FIRE marker in {path}")
+
+
+# ---------------------------------------------------------------------------
+# lint: violation fixtures — exactly one finding, right rule, right line
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("rel,rule", [
+    ("bad_pallas_site.py", "pallas-call-outside-kernels"),
+    ("kernels/bad_interpret.py", "pallas-missing-interpret"),
+    ("serving/bad_host_sync.py", "host-sync-in-dispatch-loop"),
+    ("serving/bad_item.py", "host-sync-in-dispatch-loop"),
+    ("bad_paged_gather.py", "paged-gather-outside-kernels"),
+    ("core/policies/bad_policy.py", "policy-imports"),
+])
+def test_violation_fixture_fires_exactly_once(rel, rule):
+    path = FIXTURES / rel
+    findings = lint.lint_file(path, FIXTURES)
+    assert len(findings) == 1, findings
+    f = findings[0]
+    assert f.rule == rule
+    assert f.line == _fire_line(path)
+    assert f.path == rel
+
+
+# ---------------------------------------------------------------------------
+# lint: suppression contract
+# ---------------------------------------------------------------------------
+def test_justified_suppression_silences():
+    for rel in ("suppressed_ok.py", "suppressed_above.py"):
+        assert lint.lint_file(FIXTURES / rel, FIXTURES) == [], rel
+
+
+def test_bare_suppression_keeps_finding_and_reports_marker():
+    rules = {f.rule for f in
+             lint.lint_file(FIXTURES / "suppressed_bare.py", FIXTURES)}
+    assert rules == {"paged-gather-outside-kernels", "bare-suppression"}
+
+
+def test_unused_and_unknown_suppressions_are_findings():
+    (f,) = lint.lint_file(FIXTURES / "suppressed_unused.py", FIXTURES)
+    assert f.rule == "unused-suppression"
+    (f,) = lint.lint_file(FIXTURES / "suppressed_unknown.py", FIXTURES)
+    assert f.rule == "unknown-suppression"
+
+
+def test_repo_lint_is_clean():
+    """The shipped tree carries no violations and no stale markers."""
+    assert lint.lint_tree(SRC_ROOT) == []
+
+
+# ---------------------------------------------------------------------------
+# HLO passes: synthetic programs
+# ---------------------------------------------------------------------------
+def test_kv_copy_ops_threshold_and_span():
+    txt = ("  %transpose.9 = f32[4,2,16]{2,1,0} transpose(f32[4,16,2]"
+           "{2,1,0} %p0), dimensions={0,2,1}\n"
+           "  %gather.1 = s32[4096]{0} gather(s32[8192]{0} %p1, "
+           "s32[4096,1]{1,0} %idx)\n")
+    hits = H.kv_copy_ops(txt, 128)
+    assert len(hits) == 1                 # int gather is index traffic
+    op, dims, line_no, span = hits[0]
+    assert (op, dims, line_no) == ("transpose", (4, 2, 16), 1)
+    assert "transpose.9" in span
+    assert H.kv_copy_ops(txt, 129) == []
+
+
+def test_host_transfer_pass():
+    txt = ("  %of = token[] outfeed(f32[8]{0} %x, token[] %tok)\n"
+           "  %cc = f32[2]{0} custom-call(f32[2]{0} %y), "
+           'custom_call_target="MoveToHost"\n'
+           "  %p0 = f32[128,8]{1,0:S(5)} parameter(0)\n"
+           "  %ad = f32[8]{0} add(f32[8]{0} %a, f32[8]{0} %b)\n")
+    found = H.host_transfer_findings(txt, label="t")
+    assert [f.line for f in found] == [1, 2, 3]
+    assert {f.rule for f in found} == {"host-transfer"}
+    assert H.host_transfer_findings("%a = f32[2]{0:S(0)} parameter(0)") \
+        == []
+
+
+def test_collective_budget_pass():
+    txt = ("  %ar = f32[1024]{0} all-reduce(f32[1024]{0} %x), "
+           "replica_groups={{0,1}}, to_apply=%sum\n")
+    (f,) = H.collective_findings(txt, max_bytes=0.0, label="t")
+    assert f.rule == "collective-traffic"
+    assert "4096" in f.message           # 1024 * 4B * 2(g-1)/g
+    assert H.collective_findings(txt, max_bytes=1e9) == []
+    assert H.collective_findings("", max_bytes=0.0) == []
+
+
+def test_jit_cache_guard():
+    ok = H.jit_cache_findings(prefill_traces=3, prefill_pages=4,
+                              decode_traces=1, distinct_decode_steps=1)
+    assert ok == []
+    bad = H.jit_cache_findings(prefill_traces=9, prefill_pages=4,
+                               decode_traces=3, distinct_decode_steps=1)
+    assert [f.rule for f in bad] == ["jit-cache-growth"] * 2
+
+
+# ---------------------------------------------------------------------------
+# donation auditor: headers from really-compiled programs
+# ---------------------------------------------------------------------------
+def _compile_add(donate):
+    kw = {"donate_argnums": (0,)} if donate else {}
+    f = jax.jit(lambda x, y: x + y, **kw)
+    s = jax.ShapeDtypeStruct((256, 256), jnp.float32)
+    return f.lower(s, s).compile()
+
+
+def test_donation_parse_and_findings():
+    donated_txt = _compile_add(donate=True).as_text()
+    plain_txt = _compile_add(donate=False).as_text()
+
+    assert H.donated_params(donated_txt) == {0: 0}
+    assert H.donated_params(plain_txt) == {}
+
+    params, outs = H.entry_params_and_outputs(plain_txt)
+    assert params == ["f32[256,256]", "f32[256,256]"]
+    assert outs == ["f32[256,256]"]
+
+    assert H.donation_findings(donated_txt, min_bytes=1) == []
+    found = H.donation_findings(plain_txt, min_bytes=1, label="add")
+    assert len(found) == 1               # one free output to alias onto
+    assert found[0].rule == "undonated-buffer"
+    # below the size floor, or explicitly allowed: silent
+    assert H.donation_findings(plain_txt, min_bytes=1 << 30) == []
+    assert H.donation_findings(
+        plain_txt, min_bytes=1,
+        allow={"f32[256,256]": "test exemption"}) == []
+
+
+def test_donation_report_measures_alias():
+    rep_d = H.donation_report(_compile_add(donate=True))
+    rep_p = H.donation_report(_compile_add(donate=False))
+    buf = 256 * 256 * 4
+    assert rep_d["alias_bytes"] >= buf
+    assert rep_p["alias_bytes"] == 0
+    assert rep_d["peak_live_bytes"] + buf \
+        == rep_d["peak_live_bytes_undonated"]
+
+
+# ---------------------------------------------------------------------------
+# the real engine: full audit is clean, cache donation is in effect
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def tiny_engine():
+    from repro.config import ModelConfig, RaasConfig
+    from repro.models import model as M
+    from repro.serving.engine import Engine
+    cfg = ModelConfig(name="audit-tiny", arch_type="dense", n_layers=1,
+                      d_model=32, n_heads=2, n_kv_heads=2, d_ff=64,
+                      vocab_size=64, head_dim=16)
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    raas = RaasConfig(policy="quest", budget_tokens=64, page_size=16,
+                      quest_topk_pages=2)
+    return Engine(params, cfg, raas, batch_slots=2, max_seq=128,
+                  max_prefill=32, prefill_chunk=16, chunk_steps=2)
+
+
+def test_engine_audit_no_findings_and_cache_donated(tiny_engine):
+    findings, report = engine_audit.audit_engine(tiny_engine)
+    assert findings == [], "\n".join(f.format() for f in findings)
+    assert set(report) == set(engine_audit.DISPATCHES)
+    k = tiny_engine.cache.per_pos[0].attn.k_pages
+    cache_kv_bytes = 2 * k.size * k.dtype.itemsize       # K + V pages
+    for name, rep in report.items():
+        assert rep["alias_bytes"] >= cache_kv_bytes, (name, rep)
+        assert rep["peak_live_bytes"] < rep["peak_live_bytes_undonated"]
+
+
+def test_engine_dispatch_headers_alias_the_cache(tiny_engine):
+    """Every chunked dispatch donates its cache argument: reset arg 0,
+    prefill/decode arg 1 (plus the cache's other leaves)."""
+    lowered = engine_audit.dispatch_lowerings(tiny_engine)
+    n_cache_leaves = len(jax.tree.leaves(tiny_engine.cache))
+    for name, low in lowered.items():
+        donated = H.donated_params(low.compile().as_text())
+        assert len(donated) == n_cache_leaves, (name, donated)
+
+
+def test_audit_rejects_fallback_engine():
+    class Fake:
+        chunked_prefill = False
+    with pytest.raises(ValueError, match="one-shot prefill fallback"):
+        engine_audit.dispatch_lowerings(Fake())
+
+
+def test_full_cache_elems_matches_layout(tiny_engine):
+    k = tiny_engine.cache.per_pos[0].attn.k_pages
+    L, B, KV, S, P, hd = k.shape
+    assert engine_audit.full_cache_elems(tiny_engine) \
+        == B * KV * S * P * hd
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+def test_cli_lint_only_passes_on_repo(capsys):
+    assert cli.main(["--strict", "--skip-hlo"]) == 0
+    assert "0 finding(s)" in capsys.readouterr().out
+
+
+def test_cli_strict_fails_on_fixture_tree(capsys):
+    rc = cli.main(["--strict", "--skip-hlo", "--root", str(FIXTURES)])
+    assert rc == 1
+    out = capsys.readouterr().out
+    assert "[policy-imports]" in out and "[bare-suppression]" in out

@@ -36,7 +36,7 @@ import numpy as np
 import pytest
 
 from mdev_harness import run_case
-from test_zero_copy import _copy_ops_at_least
+from repro.analysis.hlo import kv_copy_ops as _copy_ops_at_least
 
 from repro.config import ModelConfig, RaasConfig
 from repro.core import paged_cache as pc

@@ -30,6 +30,14 @@ def test_serving_throughput_smoke():
     assert 0 < ph["prefill_bytes_per_token"] \
         < ph["prefill_bytes_per_token_gather"]
     assert ph["prefill_tokens"] > ph["tokens_emitted"]  # truly prefill-heavy
+    # cache donation holds on every jitted dispatch and is no worse
+    # than one full KV cache (the second live copy it removes)
+    don = result["donation"]
+    assert don["donation_saved_bytes"] >= don["kv_cache_bytes"] > 0
+    assert don["peak_live_bytes"] + don["kv_cache_bytes"] \
+        <= don["peak_live_bytes_undonated"]
+    assert set(don["per_dispatch"]) \
+        == {"reset", "prefill_chunk", "decode_chunk"}
 
 
 @pytest.mark.slow

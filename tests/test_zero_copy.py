@@ -18,8 +18,6 @@ Two families of guarantees for the index-mapped kernel rewrite:
     O(S) cache — per-step traffic stays bounded by the selection size
     L, not the slot count S.
 """
-import re
-
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -80,25 +78,11 @@ def test_policy_parity_oracle_vs_pallas_interpret(policy):
 
 
 # ---------------------------------------------------------------------------
-# HLO regression: selection is indices-only, no KV-sized copies
+# HLO regression: selection is indices-only, no KV-sized copies.
+# The detector is the shared repro.analysis.hlo pass (same one the
+# `python -m repro.analysis.run` CLI and CI leg run over the engine).
 # ---------------------------------------------------------------------------
-_COPY_OP = re.compile(
-    r"=\s*(f32|bf16|f16)\[([\d,]*)\][^ ]*\s+(transpose|gather)\(")
-
-
-def _copy_ops_at_least(hlo_text: str, min_elems: int):
-    """(op, dims) of float transpose/gather instructions whose output
-    holds >= min_elems elements."""
-    found = []
-    for line in hlo_text.splitlines():
-        m = _COPY_OP.search(line)
-        if not m:
-            continue
-        dims = [int(d) for d in m.group(2).split(",") if d]
-        n = int(np.prod(dims)) if dims else 1
-        if n >= min_elems:
-            found.append((m.group(3), tuple(dims)))
-    return found
+from repro.analysis.hlo import kv_copy_ops as _copy_ops_at_least  # noqa: E402
 
 
 def _compiled_decode_step(impl: str, n_slots: int, policy: str = "quest"):
