@@ -32,11 +32,20 @@ The row asserts the paged path strictly beats the gather path, and
 that the power-of-two ``ctx_pages`` bucketing held prefill
 compilations at O(log prefill_pages).
 
+A **prefix-cache row** (schema ``serving/v5-prefix-cache``) serves a
+fleet sharing one long prompt prefix twice — prefix caching on and
+off — and asserts the cached run's outputs are byte-identical while
+its ``prefill_tokens`` collapse by exactly ``prefix_cached_tokens``
+(only the unshared suffixes, plus the first fleet member's full
+prompt, ever run through ``prefill_chunk``).
+
 ``--mesh data=N`` adds a **sharded row**: the same workload through a
 lane-sharded engine under an N-device mesh (forced host devices on
 CPU).  The row asserts the sharded engine's outputs are byte-identical
 to the single-device continuous run and records per-device paged-cache
-bytes (from addressable-shard shapes — the O(L*B/n_dev) claim).
+bytes (from addressable-shard shapes — the O(L*B/n_dev) claim).  The
+sharded pass also re-runs the shared-prefix fleet under the mesh and
+asserts the same outputs and the same cached-token count.
 
 Forcing host devices splits the CPU, which skews the *baseline* rows'
 wall-clock — so when a sharded run finds an existing artifact for the
@@ -59,6 +68,7 @@ import jax
 import numpy as np
 
 from benchmarks.common import BENCH_MODEL, policy_cfg
+from repro.config import ServeConfig
 from repro.models import model as M
 from repro.serving.engine import Engine, Request
 from repro.serving.scheduler import serve
@@ -100,16 +110,39 @@ def _workload_prefill_heavy(n_requests: int, rng) -> List[Request]:
         for i in range(n_requests)]
 
 
-def _engine(params, max_seq: int, mesh=None) -> Engine:
+def _workload_shared_prefix(n_requests: int, rng,
+                            prefix_len: int = 96,
+                            suffix_len: int = 16) -> List[Request]:
+    """A fleet sharing one long prompt prefix (system-prompt regime):
+    each request appends a distinct suffix, so with prefix caching only
+    the suffixes (plus the first fleet member's full prompt) ever run
+    through ``prefill_chunk``."""
+    prefix = rng.integers(0, BENCH_MODEL.vocab_size,
+                          size=prefix_len).astype(np.int32)
+    return [Request(
+        uid=i,
+        prompt=np.concatenate(
+            [prefix, rng.integers(0, BENCH_MODEL.vocab_size,
+                                  size=suffix_len).astype(np.int32)]),
+        max_new_tokens=8)
+        for i in range(n_requests)]
+
+
+def _engine(params, max_seq: int, mesh=None,
+            prefix_caching: bool = True) -> Engine:
     raas = policy_cfg("raas", BUDGET, page_size=PAGE_SIZE)
-    return Engine(params, BENCH_MODEL, raas, batch_slots=BATCH_SLOTS,
-                  max_seq=max_seq, max_prefill=MAX_PREFILL,
-                  prefill_chunk=PREFILL_CHUNK, chunk_steps=CHUNK_STEPS,
-                  mesh=mesh)
+    cfg = ServeConfig(batch_slots=BATCH_SLOTS, max_seq=max_seq,
+                      max_prefill=MAX_PREFILL,
+                      prefill_chunk=PREFILL_CHUNK,
+                      chunk_steps=CHUNK_STEPS,
+                      prefix_caching=prefix_caching)
+    return Engine(params, BENCH_MODEL, raas, cfg, mesh=mesh)
 
 
-def _run_continuous(params, reqs, max_seq, mesh=None) -> Dict:
-    eng = _engine(params, max_seq, mesh=mesh)
+def _run_continuous(params, reqs, max_seq, mesh=None,
+                    prefix_caching: bool = True) -> Dict:
+    eng = _engine(params, max_seq, mesh=mesh,
+                  prefix_caching=prefix_caching)
     t0 = time.perf_counter()
     done = serve(eng, reqs)
     wall = time.perf_counter() - t0
@@ -132,6 +165,12 @@ def _run_continuous(params, reqs, max_seq, mesh=None) -> Dict:
             eng.prefill_kv_bytes / max(eng.prefill_tokens, 1),
         "prefill_bytes_per_token_gather":
             eng.prefill_kv_bytes_gather / max(eng.prefill_tokens, 1),
+        "prefix_caching": eng.prefix_caching,
+        "prefix_cached_tokens": eng.prefix_cached_tokens,
+        "prefix_mounts": eng.prefix_mounts,
+        "prefix_clones": eng.prefix_clones,
+        "session_hits": eng.session_hits,
+        "pool_dispatches": eng.pool_dispatches,
         "outputs": {r.uid: list(r.output) for r in done},
     }
 
@@ -231,9 +270,37 @@ def run(n_requests: int = 15, write_json: bool = True,
     assert ph["prefill_traces"] <= max_buckets, \
         (ph["prefill_traces"], max_buckets)
 
+    # shared-prefix row: the system-prompt fleet.  Prefix caching must
+    # collapse prefill to the unshared suffixes without changing one
+    # output token vs an engine with caching off.
+    # fleet must outnumber the lanes: members admitted after the first
+    # wave registers its prefill pages are the ones that hit the index
+    sp_reqs = _workload_shared_prefix(max(n_requests, 2 * BATCH_SLOTS),
+                                      np.random.default_rng(2))
+    sp = _run_continuous(params, copy.deepcopy(sp_reqs), max_seq)
+    sp_base = _run_continuous(params, copy.deepcopy(sp_reqs), max_seq,
+                              prefix_caching=False)
+    sp["workload"] = [{"uid": r.uid, "prompt_len": int(len(r.prompt)),
+                       "max_new_tokens": r.max_new_tokens}
+                      for r in sp_reqs]
+    assert sp["outputs"] == sp_base["outputs"], \
+        "prefix caching altered request outputs"
+    assert sp["prefix_mounts"] + sp["prefix_clones"] >= 1, sp
+    assert sp["prefix_cached_tokens"] > 0
+    # the collapse is exact: every cached token is a prefill token the
+    # baseline paid for and this run did not
+    assert sp["prefill_tokens"] \
+        == sp_base["prefill_tokens"] - sp["prefix_cached_tokens"], \
+        (sp["prefill_tokens"], sp_base["prefill_tokens"],
+         sp["prefix_cached_tokens"])
+    sp["prefill_tokens_uncached"] = sp_base["prefill_tokens"]
+    sp["prefill_collapse"] = \
+        1 - sp["prefill_tokens"] / sp_base["prefill_tokens"]
+
     don = _donation_audit(params, max_seq)
 
     shard = None
+    shard_sp = None
     if mesh_spec:
         shard = _run_sharded(params, copy.deepcopy(reqs), max_seq, mesh_spec)
         # sharding the lane axis must not change a single output token
@@ -248,6 +315,15 @@ def run(n_requests: int = 15, write_json: bool = True,
         # exactly the data-axis size (lane axis shards evenly)
         assert shard["kv_bytes_per_device"] * shard["n_data"] \
             == shard["kv_bytes_global"] == cont["kv_bytes_global"], shard
+        # prefix caching under the mesh: same mounts/clones, same cached
+        # tokens, byte-identical outputs to the single-device run
+        shard_sp = _run_sharded(params, copy.deepcopy(sp_reqs), max_seq,
+                                mesh_spec)
+        assert shard_sp["outputs"] == sp["outputs"], \
+            "sharded prefix caching altered request outputs"
+        assert shard_sp["prefix_cached_tokens"] \
+            == sp["prefix_cached_tokens"], (shard_sp, sp)
+        assert shard_sp["prefill_tokens"] == sp["prefill_tokens"]
 
     # continuous batching must not change a single output token
     assert cont["outputs"] == seq["outputs"], \
@@ -261,9 +337,11 @@ def run(n_requests: int = 15, write_json: bool = True,
         (cont["dispatches"], seq["dispatches"])
 
     rows = [("continuous", cont), ("sequential", seq),
-            ("prefill_heavy", ph)]
+            ("prefill_heavy", ph), ("prefix_cache", sp)]
     if shard is not None:
         rows.append((f"sharded[{shard['mesh']}]", shard))
+    if shard_sp is not None:
+        rows.append((f"sharded_prefix[{shard_sp['mesh']}]", shard_sp))
     for name, r in rows:
         print(f"serving/{name},{r['wall_s']*1e6:.0f}us,"
               f"tok_per_s={r['tok_per_s']:.1f},"
@@ -280,6 +358,13 @@ def run(n_requests: int = 15, write_json: bool = True,
               f"{shard['kv_bytes_per_device']/1e6:.2f}MB,"
               f"kv_global={shard['kv_bytes_global']/1e6:.2f}MB,"
               f"n_devices={shard['n_devices']}", flush=True)
+    print(f"serving/prefix-cache,"
+          f"cached_tokens={sp['prefix_cached_tokens']},"
+          f"prefill={sp['prefill_tokens']},"
+          f"uncached_would_be={sp['prefill_tokens_uncached']},"
+          f"collapse={sp['prefill_collapse']:.1%},"
+          f"mounts={sp['prefix_mounts']},clones={sp['prefix_clones']}",
+          flush=True)
     print(f"serving/donation,saved="
           f"{don['donation_saved_bytes']/1e6:.2f}MB,"
           f"peak_live={don['peak_live_bytes']/1e6:.2f}MB,"
@@ -293,7 +378,7 @@ def run(n_requests: int = 15, write_json: bool = True,
           flush=True)
 
     result = {
-        "schema": "serving/v4-donation",
+        "schema": "serving/v5-prefix-cache",
         "model": BENCH_MODEL.name,
         "batch_slots": BATCH_SLOTS,
         "max_prefill": MAX_PREFILL,
@@ -306,6 +391,7 @@ def run(n_requests: int = 15, write_json: bool = True,
         "continuous": {k: v for k, v in cont.items() if k != "outputs"},
         "sequential": {k: v for k, v in seq.items() if k != "outputs"},
         "prefill_heavy": {k: v for k, v in ph.items() if k != "outputs"},
+        "prefix_cache": {k: v for k, v in sp.items() if k != "outputs"},
         "donation": don,
         "throughput_speedup": speedup,
     }
@@ -313,6 +399,9 @@ def run(n_requests: int = 15, write_json: bool = True,
         result["sharded"] = {k: v for k, v in shard.items()
                              if k != "outputs"}
         result["sharded"]["forced_host_devices"] = int(jax.device_count())
+    if shard_sp is not None:
+        result["sharded_prefix"] = {k: v for k, v in shard_sp.items()
+                                    if k != "outputs"}
     if write_json:
         # two-pass artifact contract (module docstring): a sharded run
         # splits the CPU into forced host devices, skewing ITS baseline
@@ -333,7 +422,7 @@ def run(n_requests: int = 15, write_json: bool = True,
         if shard is not None:
             if prev is not None:
                 for k in ("continuous", "sequential", "prefill_heavy",
-                          "throughput_speedup"):
+                          "prefix_cache", "throughput_speedup"):
                     result[k] = prev[k]
                 print("serving: kept single-device baseline rows from "
                       f"existing {OUT_PATH.name}", flush=True)
@@ -350,6 +439,8 @@ def run(n_requests: int = 15, write_json: bool = True,
                       "wall-clock is NOT comparable", flush=True)
         elif prev is not None and "sharded" in prev:
             result["sharded"] = prev["sharded"]
+            if "sharded_prefix" in prev:
+                result["sharded_prefix"] = prev["sharded_prefix"]
             print(f"serving: kept sharded row from existing "
                   f"{OUT_PATH.name} (rerun --mesh to refresh it)",
                   flush=True)

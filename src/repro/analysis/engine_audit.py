@@ -1,11 +1,16 @@
 """Audit a live :class:`~repro.serving.engine.Engine`'s jitted
 dispatches with the :mod:`repro.analysis.hlo` passes.
 
-The engine's three chunked dispatch functions (``reset``,
-``prefill_chunk``, ``decode_chunk``) are lowered ahead-of-time with
-``ShapeDtypeStruct`` stand-ins (no device allocation beyond what the
-engine already holds) and compiled; each optimized program then runs
-through the KV-copy, host-transfer, collective and donation passes.
+The engine's chunked dispatch functions (``reset``, ``prefill_chunk``,
+``decode_chunk``, and the page pool's ``pool_transition``) are lowered
+ahead-of-time with ``ShapeDtypeStruct`` stand-ins (no device
+allocation beyond what the engine already holds) and compiled; each
+optimized program then runs through the KV-copy, host-transfer,
+collective and donation passes.  The pool's *clone* dispatch is
+deliberately not audited: copying one lane's prefix into another lane
+is a cross-shard transfer under lane sharding — an inherent collective
+the zero-collective budget would reject, bounded instead by the
+engine's ``prefix_clones``/``pool_dispatches`` accounting.
 The jit-cache guard is *not* run here — AOT lowering re-traces and
 would inflate the engine's trace counters; callers check those against
 :func:`repro.analysis.hlo.jit_cache_findings` before auditing.
@@ -24,7 +29,8 @@ import jax.numpy as jnp
 from repro.analysis import hlo
 from repro.analysis.findings import Finding
 
-DISPATCHES = ("reset", "prefill_chunk", "decode_chunk")
+DISPATCHES = ("reset", "prefill_chunk", "decode_chunk",
+              "pool_transition")
 
 
 def _sds(x) -> jax.ShapeDtypeStruct:
@@ -55,6 +61,8 @@ def dispatch_lowerings(eng) -> Dict[str, "jax.stages.Lowered"]:
         "decode_chunk": eng._chunk_fn.lower(
             params_s, cache_s, lane_i32, lane_i32, lane_bool, lane_i32,
             lane_i32, lane_i32, steps=eng.chunk_steps),
+        "pool_transition": eng._transition_fn.lower(
+            cache_s, lane_i32, lane_i32, lane_i32),
     }
 
 

@@ -28,6 +28,14 @@ Rules (stable ids — suppressions and CI reference them):
     sibling policies, jax/numpy and the stdlib).  A policy is one
     self-contained file; reaching into cache or engine internals
     couples it to layouts the registry promises to insulate it from.
+``pool-refcount-outside-pool``
+    The page pool's ``refcount`` column may be mutated only inside
+    ``core/paged_cache.py`` and ``core/page_pool.py``: no
+    ``refcount=`` keyword in a call and no ``.refcount.at[...]``
+    update chain anywhere else.  Every other layer reasons in lane
+    *transitions* (mount / incref / release / reset) — a raw count
+    write outside the pool would silently break the no-eviction
+    guarantee on shared slots that the property tests pin down.
 
 Suppression syntax — on the offending line, or a standalone comment on
 the line directly above::
@@ -53,7 +61,11 @@ RULES = (
     "host-sync-in-dispatch-loop",
     "paged-gather-outside-kernels",
     "policy-imports",
+    "pool-refcount-outside-pool",
 )
+
+# the only modules allowed to touch PagedCache.refcount directly
+_POOL_OWNERS = (("core", "paged_cache.py"), ("core", "page_pool.py"))
 
 _SUPPRESS_RE = re.compile(
     r"#\s*analysis:\s*allow=([\w-]+)(?:\s*--\s*(\S.*))?")
@@ -139,6 +151,10 @@ class _FileLint:
         return ("policies" in self.parts
                 and self.parts[-1] != "__init__.py")
 
+    @property
+    def owns_refcount(self) -> bool:
+        return self.parts[-2:] in [tuple(p) for p in _POOL_OWNERS]
+
     # -- walk --------------------------------------------------------------
     def run(self) -> List[Finding]:
         if self.is_policy_file:
@@ -163,6 +179,11 @@ class _FileLint:
         if name is None:
             return
         kwargs = {kw.arg for kw in call.keywords}
+        if "refcount" in kwargs and not self.owns_refcount:
+            self._emit("pool-refcount-outside-pool", call,
+                       "refcount= passed outside the pool modules — "
+                       "claims move only via page_pool lane transitions "
+                       "(mount/incref/release/reset)")
         if name == "pallas_call" and not self.in_kernels:
             self._emit("pallas-call-outside-kernels", call,
                        "pallas_call outside kernels/ — raw kernels live "
@@ -210,6 +231,15 @@ class _FileLint:
                        "iteration; batch the transfer outside the loop")
 
     def _check_subscript(self, sub: ast.Subscript) -> None:
+        v = sub.value
+        if (isinstance(v, ast.Attribute) and v.attr == "at"
+                and isinstance(v.value, ast.Attribute)
+                and v.value.attr == "refcount"
+                and not self.owns_refcount):
+            self._emit("pool-refcount-outside-pool", sub,
+                       ".refcount.at[...] update outside the pool "
+                       "modules — claims move only via page_pool lane "
+                       "transitions (mount/incref/release/reset)")
         if self.in_kernels:
             return
         t = _terminal_name(sub.value)

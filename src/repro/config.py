@@ -293,6 +293,14 @@ class ServeConfig:
     prefill_chunk: int = 64
     chunk_steps: int = 8
     mesh: str = ""
+    # prefix caching + multi-turn KV sessions (repro.core.page_pool):
+    # admission consults a host-side prefix index and mounts / clones
+    # already-resident prompt pages instead of re-running prefill, and
+    # requests carrying a session_id park their conversation KV for the
+    # follow-up turn.  Effective only on attention architectures with
+    # chunked prefill (the engine gates it); purely host+metadata —
+    # kernels are unchanged either way.
+    prefix_caching: bool = True
 
     def __post_init__(self) -> None:
         if self.max_prefill > self.max_seq:

@@ -1,0 +1,337 @@
+"""Refcounted page pool over :class:`~repro.core.paged_cache.PagedCache`:
+prefix caching and multi-turn KV sessions via slot aliasing.
+
+The paged cache is lane-major: slots belong to a lane for the lane's
+whole lifetime, and the zero-copy kernels resolve pages through
+scalar-prefetched index tables — so *aliasing* a page never moves KV
+bytes, it only changes who is accounted as needing them.  This module
+owns that accounting, in two halves:
+
+**Device half** — :func:`transition_lanes` applies one batched lane
+transition per dispatch (op codes below) and :func:`clone_prefix`
+copies one lane's leading prefix pages into another lane (the only KV
+byte traffic in the pool, used when a busy donor's prefix is wanted on
+a second lane).  Both are pure jittable functions over a single
+``PagedCache`` whose leaves may be period-stacked (``[n_periods, B,
+...]``) — every mask broadcasts right-aligned, exactly like
+:func:`~repro.core.paged_cache.reset_lanes`.
+
+**Host half** — :class:`PrefixIndex` is a chained-hash index over
+page-aligned prompt prefixes: ``register`` records a lane's parked
+prefix at every full-page depth, ``lookup`` returns the deepest
+registered prefix matching a new prompt (hash-chain walk + explicit
+token validation, so a hash collision can never alias wrong bytes).
+:func:`generate_session_id` / :func:`validate_session_id` are the
+multi-turn front-end contract: a client keeps one id per conversation,
+and a follow-up request carrying it resumes the parked lane instead of
+re-prefilling the whole conversation.
+
+Refcount protocol (see the paged-cache module docstring): a slot's
+``refcount`` is the number of independent claims on its contents —
+the running request holds one on every slot it writes or mounts, and
+the index holds one on every slot some registered prefix needs.  The
+engine drives transitions::
+
+    admit (no match)        RESET       wipe the lane, refcount included
+    admit (parked donor)    MOUNT a0    keep the first ceil(a0/P) slots,
+                                        +1 request claim on them, wipe
+                                        the rest; cur_len = a0
+    prefill done / parked   INCREF a0 a1  +1 index claim on slots [a0, a1)
+    request finished        RELEASE     -1 on every claimed slot; slots
+                                        reaching 0 are wiped, slots the
+                                        index still claims stay *parked*
+
+``refcount`` mutation is confined to this module and ``paged_cache``
+(the ``pool-refcount-outside-pool`` lint rule): the engine reasons in
+lane transitions, never raw counts.
+"""
+from __future__ import annotations
+
+import hashlib
+import re
+import uuid
+from typing import Dict, Iterator, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.paged_cache import INF, PagedCache
+
+# lane transition op codes (device-side; one per lane per dispatch)
+OP_NOP = 0
+OP_RESET = 1
+OP_RELEASE = 2
+OP_MOUNT = 3
+OP_INCREF = 4
+OP_NAMES = ("nop", "reset", "release", "mount", "incref")
+
+
+def _meta2d(x: jnp.ndarray) -> jnp.ndarray:
+    """One ``[B, S]`` view of possibly period-stacked slot metadata.
+
+    Slot metadata evolves identically across stacked layers (every
+    ingest/append applies the same masks to every layer), so layer 0's
+    copy is authoritative for building lane/slot masks that must
+    broadcast against leaves of *different* ranks.
+    """
+    return x[(0,) * (x.ndim - 2)]
+
+
+def transition_lanes(cache: PagedCache, op: jnp.ndarray, a0: jnp.ndarray,
+                     a1: jnp.ndarray) -> PagedCache:
+    """Apply one pool transition per lane (``op``/``a0``/``a1``: [B]
+    i32), entirely on device and metadata-only — K/V pages are never
+    touched (a wiped slot's bytes are dead via ``page_len == 0``).
+
+    Per lane: NOP leaves everything; RESET wipes the lane including
+    ``refcount``; RELEASE drops one claim from every claimed slot and
+    wipes slots reaching zero (the rest stay parked); MOUNT keeps the
+    first ``ceil(a0 / P)`` slots (+1 claim — the mounting request),
+    wipes the rest and sets ``cur_len = a0``; INCREF adds one claim on
+    slots ``[a0, a1)`` (prefix registration).  The caller queues at
+    most one op per lane per dispatch and owns the host-side ordering.
+    """
+    S = cache.page_len.shape[-1]
+    P = cache.k_pages.shape[-2]
+    rc2 = _meta2d(cache.refcount)                            # [B, S]
+    slot_ids = jnp.arange(S)[None]                           # [1, S]
+
+    is_reset = op == OP_RESET
+    is_release = op == OP_RELEASE
+    is_mount = op == OP_MOUNT
+    is_incref = op == OP_INCREF
+
+    kept_pages = -(-a0 // P)                                 # [B]
+    kept = slot_ids < kept_pages[:, None]                    # [B, S]
+    claimed = rc2 > 0
+    dec = (is_release[:, None] & claimed).astype(jnp.int32)
+    inc = ((is_mount[:, None] & kept & claimed)
+           | (is_incref[:, None] & claimed
+              & (slot_ids >= a0[:, None])
+              & (slot_ids < a1[:, None]))).astype(jnp.int32)
+    zero = is_reset[:, None] | (is_mount[:, None] & ~kept)
+    rc2_new = jnp.where(zero, 0, rc2 - dec + inc)
+
+    # slots this transition frees: metadata is wiped so they read as
+    # free pages everywhere (eviction, kernels, accounting alike)
+    clear = (is_reset[:, None]
+             | (is_release[:, None] & (rc2_new == 0))
+             | (is_mount[:, None] & ~kept))                  # [B, S]
+    c3 = clear[:, None, :, None]                # vs [.., B, KV, S, hd]
+    lane = is_reset | is_release | is_mount                  # [B]
+    # mounted pages become the new request's prompt prefix: pin them
+    # and restore the prefill priority (= first-token position), so a
+    # mounted lane is byte-identical to one that re-ran prefill — the
+    # parity the session/prefix tests assert.
+    mountk = is_mount[:, None] & kept & claimed
+    return cache._replace(
+        priority=jnp.where(clear, 0.0,
+                           jnp.where(mountk,
+                                     cache.page_pos.astype(jnp.float32),
+                                     cache.priority)),
+        page_pos=jnp.where(clear, -1, cache.page_pos),
+        page_len=jnp.where(clear, 0, cache.page_len),
+        pinned=jnp.where(clear, False, cache.pinned | mountk),
+        refcount=jnp.where(zero, 0, cache.refcount - dec + inc),
+        rep_min=jnp.where(c3, INF, cache.rep_min),
+        rep_max=jnp.where(c3, -INF, cache.rep_max),
+        active_slot=jnp.where(lane, -1, cache.active_slot),
+        cur_len=jnp.where(lane, jnp.where(is_mount, a0, 0),
+                          cache.cur_len),
+    )
+
+
+# per-field rank *after* the lane axis: leaves may carry leading
+# stacked axes, so the lane axis of field f is ``ndim - 1 - after``.
+_AFTER_LANE = dict(k_pages=4, v_pages=4, rep_min=3, rep_max=3,
+                   priority=1, page_pos=1, page_len=1, pinned=1,
+                   refcount=1, active_slot=0, cur_len=0)
+
+
+def clone_prefix(cache: PagedCache, src: jnp.ndarray, dst: jnp.ndarray,
+                 keep_tokens: jnp.ndarray) -> PagedCache:
+    """Copy lane ``src``'s first ``ceil(keep_tokens / P)`` prefix slots
+    into lane ``dst`` — the busy-donor path: ``src`` keeps serving
+    untouched while ``dst`` starts from a private, byte-identical copy
+    of the shared prefix (``refcount = 1``: the new request's claim
+    only; the index keeps pointing at the donor).  ``dst``'s other
+    slots are wiped; ``cur_len`` becomes ``keep_tokens``.
+
+    O(prefix bytes) device traffic for one lane — the only KV copy in
+    the pool, and still far cheaper than re-running prefill compute.
+    """
+    S = cache.page_len.shape[-1]
+    P = cache.k_pages.shape[-2]
+    kept = jnp.arange(S) < -(-keep_tokens // P)              # [S]
+
+    def take(name):
+        x = getattr(cache, name)
+        ax = x.ndim - 1 - _AFTER_LANE[name]
+        return jax.lax.dynamic_index_in_dim(x, src, axis=ax,
+                                            keepdims=False)
+
+    def put(name, row):
+        x = getattr(cache, name)
+        ax = x.ndim - 1 - _AFTER_LANE[name]
+        return jax.lax.dynamic_update_index_in_dim(
+            x, row.astype(x.dtype), dst, axis=ax)
+
+    def take_at(name, lane):
+        x = getattr(cache, name)
+        ax = x.ndim - 1 - _AFTER_LANE[name]
+        return jax.lax.dynamic_index_in_dim(x, lane, axis=ax,
+                                            keepdims=False)
+
+    # kv rows [.., KV, S, P, hd]: the [S, 1, 1] mask right-aligns onto
+    # the slot axis; non-kept slots keep dst's (dead) bytes in place.
+    kv_keep = kept[:, None, None]
+    k_row = jnp.where(kv_keep, take("k_pages"), take_at("k_pages", dst))
+    v_row = jnp.where(kv_keep, take("v_pages"), take_at("v_pages", dst))
+    new = cache._replace(
+        k_pages=put("k_pages", k_row),
+        v_pages=put("v_pages", v_row),
+        rep_min=put("rep_min", jnp.where(kept[:, None],
+                                         take("rep_min"), INF)),
+        rep_max=put("rep_max", jnp.where(kept[:, None],
+                                         take("rep_max"), -INF)),
+        priority=put("priority", jnp.where(kept, take("priority"), 0.0)),
+        page_pos=put("page_pos", jnp.where(kept, take("page_pos"), -1)),
+        page_len=put("page_len", jnp.where(kept, take("page_len"), 0)),
+        pinned=put("pinned", jnp.where(kept, take("pinned"), False)),
+        refcount=put("refcount",
+                     jnp.broadcast_to(kept.astype(jnp.int32),
+                                      jnp.shape(take("refcount")))),
+        active_slot=put("active_slot",
+                        jnp.full(jnp.shape(take("active_slot")), -1,
+                                 jnp.int32)),
+        cur_len=put("cur_len",
+                    jnp.broadcast_to(keep_tokens,
+                                     jnp.shape(take("cur_len")))),
+    )
+    return new
+
+
+# ---------------------------------------------------------------------------
+# Host half: prefix index + session ids
+# ---------------------------------------------------------------------------
+class PrefixIndex:
+    """Chained-hash index over page-aligned prompt prefixes, host-side.
+
+    Each registered lane contributes one digest per full-page depth of
+    its parked prefix; digests chain (depth ``d`` hashes depth ``d-1``'s
+    state plus page ``d``'s tokens), so one walk over a new prompt's
+    pages probes every depth.  Lookups validate the actual tokens
+    against the registered lane's recorded prefix — a digest collision
+    degrades to a miss, never to aliasing wrong KV bytes.
+
+    The index is pure bookkeeping: it never touches device state.  The
+    engine mirrors every ``register``/``truncate``/``drop_lane`` with
+    the matching refcount transition (INCREF / MOUNT / RESET), keeping
+    the invariant that a lane's parked pages ``[0, covered_pages)``
+    hold exactly one index claim each.
+    """
+
+    def __init__(self, page_size: int):
+        if page_size < 1:
+            raise ValueError("page_size must be positive")
+        self.page_size = page_size
+        self._entry: Dict[bytes, Tuple[int, int]] = {}  # digest -> (lane, depth)
+        self._lane_tokens: Dict[int, np.ndarray] = {}   # lane -> covered prefix
+
+    def _digests(self, tokens) -> Iterator[Tuple[int, bytes]]:
+        toks = np.asarray(tokens, np.int32)
+        P = self.page_size
+        h = hashlib.sha256()
+        for d in range(len(toks) // P):
+            h.update(toks[d * P:(d + 1) * P].tobytes())
+            yield d + 1, h.digest()
+
+    def covered_pages(self, lane: int) -> int:
+        """Pages of ``lane``'s parked prefix the index holds a claim on."""
+        return len(self._lane_tokens.get(lane, ())) // self.page_size
+
+    def register(self, lane: int, tokens) -> int:
+        """Record ``lane``'s resident prefix (every full page of
+        ``tokens``) and return the lane's new covered-page count.  The
+        engine INCREFs slots ``[old_covered, new_covered)`` — the index's
+        claim on the newly covered pages.  Depths whose digest another
+        lane already owns are skipped (one canonical copy per content)."""
+        prev = self.covered_pages(lane)
+        new_cover = prev
+        for d, dg in self._digests(tokens):
+            owner = self._entry.get(dg)
+            if owner is None:
+                self._entry[dg] = (lane, d)
+                new_cover = max(new_cover, d)
+            elif owner[0] == lane:
+                new_cover = max(new_cover, d)
+        if new_cover > prev:
+            self._lane_tokens[lane] = np.asarray(
+                tokens, np.int32)[:new_cover * self.page_size].copy()
+        return new_cover
+
+    def lookup(self, tokens) -> Optional[Tuple[int, int]]:
+        """Deepest registered prefix matching ``tokens``, as
+        ``(lane, n_pages)``; None if nothing matches.  Token-validated:
+        the match is only reported if the owning lane's recorded prefix
+        is byte-equal to the prompt's leading pages."""
+        toks = np.asarray(tokens, np.int32)
+        P = self.page_size
+        best = None
+        for d, dg in self._digests(toks):
+            owner = self._entry.get(dg)
+            if owner is None:
+                continue
+            lane, depth = owner
+            reg = self._lane_tokens.get(lane)
+            if reg is None or len(reg) < depth * P:
+                continue
+            if not np.array_equal(reg[:d * P], toks[:d * P]):
+                continue
+            best = (lane, d)
+        return best
+
+    def truncate(self, lane: int, n_pages: int) -> None:
+        """Shrink ``lane``'s registration to its first ``n_pages`` pages
+        (a mount kept fewer pages than were parked).  The matching
+        device-side wipe is MOUNT's own ``~kept`` clear."""
+        reg = self._lane_tokens.get(lane)
+        if reg is None:
+            return
+        for d, dg in self._digests(reg):
+            if d > n_pages and self._entry.get(dg) == (lane, d):
+                del self._entry[dg]
+        if n_pages <= 0:
+            self._lane_tokens.pop(lane, None)
+        else:
+            self._lane_tokens[lane] = reg[:n_pages * self.page_size]
+
+    def drop_lane(self, lane: int) -> None:
+        """Forget ``lane`` entirely (the engine is about to RESET it)."""
+        reg = self._lane_tokens.pop(lane, None)
+        if reg is None:
+            return
+        for d, dg in self._digests(reg):
+            if self._entry.get(dg) == (lane, d):
+                del self._entry[dg]
+
+
+_SESSION_RE = re.compile(r"^[0-9a-f]{32}$")
+
+
+def generate_session_id() -> str:
+    """New conversation id for the multi-turn session front-end: the
+    client keeps one per conversation and sends it on every turn."""
+    return uuid.uuid4().hex
+
+
+def validate_session_id(session_id: str) -> str:
+    """Validate a client-supplied session id (shape only — whether the
+    engine still holds the session's KV is the engine's business).
+    Returns the id; raises ``ValueError`` on malformed input."""
+    if not isinstance(session_id, str) or not _SESSION_RE.match(session_id):
+        raise ValueError(
+            f"malformed session id {session_id!r}: expected a 32-char "
+            "lowercase hex string from generate_session_id()")
+    return session_id

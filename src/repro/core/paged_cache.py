@@ -10,6 +10,7 @@ static-shape, so "eviction" here means *overwriting a victim slot*:
     page_pos           [B, S] i32          first-token position, -1 = free
     page_len           [B, S] i32          tokens filled (0..P)
     pinned             [B, S] bool         prefill pages are exempt
+    refcount           [B, S] i32          page-pool references (see below)
     active_slot        [B]    i32          slot currently being filled (-1)
     cur_len            [B]    i32          tokens written so far
 
@@ -31,6 +32,30 @@ All slot-metadata operations are O(S) vector ops per decode step —
 fully jittable, batched, and shardable on the batch axis.  The policy
 layer (policies/) decides priorities; this module only knows "evict
 argmin priority among unpinned".
+
+DESIGN — refcounted page aliasing (prefix caching)
+==================================================
+``refcount`` [B, S] i32 counts the independent claims on a slot's
+*contents*: the request currently running on the lane holds one claim
+on every slot it writes or mounts, and the host-side prefix index
+(:mod:`repro.core.page_pool`) holds one claim on every slot it has
+registered as a shareable prompt prefix (including *parked* prefixes —
+pages whose lane has been freed but whose prefill KV is retained for
+future aliasing).  The pool invariant every write path here upholds:
+
+  * a slot with ``refcount > 1`` is never evicted (:func:`_eviction_key`
+    hard-protects it like a pinned page), never overwritten
+    (:func:`ingest_prefill_chunk` masks such writes out), and never
+    reset (only the pool's transition ops may decref it);
+  * a *divergent* append into a shared partial page copies-on-write:
+    :func:`append_token` allocates a private slot, copies the shared
+    page's bytes and metadata, decrefs the shared slot, and appends
+    into the private copy — byte-identical to an unshared lane.
+
+``refcount`` mutation is confined to this module and
+:mod:`repro.core.page_pool` (the ``pool-refcount-outside-pool`` lint
+rule enforces it): everything above the pool reasons about lanes and
+prefixes, never raw counts.
 """
 from __future__ import annotations
 
@@ -65,6 +90,7 @@ class PagedCache(NamedTuple):
     page_pos: jnp.ndarray   # [B, S] i32 (-1 = free)
     page_len: jnp.ndarray   # [B, S] i32
     pinned: jnp.ndarray     # [B, S] bool
+    refcount: jnp.ndarray   # [B, S] i32 (0 = unreferenced)
     active_slot: jnp.ndarray  # [B] i32 (-1 = none)
     cur_len: jnp.ndarray    # [B] i32
 
@@ -128,6 +154,7 @@ def init_cache(spec: CacheSpec, batch: int) -> PagedCache:
         page_pos=jnp.full((batch, S), -1, jnp.int32),
         page_len=jnp.zeros((batch, S), jnp.int32),
         pinned=jnp.zeros((batch, S), jnp.bool_),
+        refcount=jnp.zeros((batch, S), jnp.int32),
         active_slot=jnp.full((batch,), -1, jnp.int32),
         cur_len=jnp.zeros((batch,), jnp.int32),
     )
@@ -192,6 +219,8 @@ def ingest_prefill(cache: PagedCache, k: jnp.ndarray, v: jnp.ndarray,
         page_len=cache.page_len.at[:, :n_pre_pages].set(plen),
         pinned=cache.pinned.at[:, :n_pre_pages].set(
             jnp.logical_and(pin, plen > 0)),
+        refcount=cache.refcount.at[:, :n_pre_pages].set(
+            (plen > 0).astype(jnp.int32)),
         active_slot=jnp.full((B,), -1, jnp.int32),
         cur_len=lengths.astype(jnp.int32),
     )
@@ -205,6 +234,12 @@ def reset_lanes(cache: PagedCache, mask: jnp.ndarray) -> PagedCache:
     cleared (``page_len == 0`` makes every stale K/V byte dead — the
     prefix contract masks it in every kernel), so no K/V page needs to
     be zeroed, copied or re-materialized on host.
+
+    A reset wipes ``refcount`` with the rest of the lane: callers must
+    only reset lanes the prefix index holds no claim on.  Lanes with
+    registered/parked pages go through
+    :func:`repro.core.page_pool.transition_lanes` (RELEASE keeps the
+    index's claim; RESET there asserts none exists).
     """
     m1 = mask[:, None]
     m3 = mask[:, None, None, None]
@@ -213,6 +248,7 @@ def reset_lanes(cache: PagedCache, mask: jnp.ndarray) -> PagedCache:
         page_pos=jnp.where(m1, -1, cache.page_pos),
         page_len=jnp.where(m1, 0, cache.page_len),
         pinned=jnp.where(m1, False, cache.pinned),
+        refcount=jnp.where(m1, 0, cache.refcount),
         rep_min=jnp.where(m3, INF, cache.rep_min),
         rep_max=jnp.where(m3, -INF, cache.rep_max),
         active_slot=jnp.where(mask, -1, cache.active_slot),
@@ -240,7 +276,12 @@ def ingest_prefill_chunk(cache: PagedCache, k: jnp.ndarray, v: jnp.ndarray,
     indistinguishable from a one-shot ingest of the same tokens.
 
     Capacity is the caller's contract (checked host-side at admission):
-    out-of-range slots are clipped and their writes are no-op blends.
+    out-of-range pages and shared pages (``refcount > 1`` — pool
+    property) are dropped from the scatter entirely, and ``cur_len``
+    advances only by the tokens actually written, so
+    ``cur_len == tokens_cached()`` holds even after a contract
+    violation — corruption surfaces as a loudly stalled lane, never as
+    silently divergent accounting.
     """
     B, C, KV, hd = k.shape
     S, P = cache.n_slots, cache.page_size
@@ -256,54 +297,53 @@ def ingest_prefill_chunk(cache: PagedCache, k: jnp.ndarray, v: jnp.ndarray,
     live = pos_in_chunk[None] < chunk_lens[:, None, None]     # [B, nC, P]
     plen = live.sum(-1).astype(jnp.int32)                     # [B, nC]
     raw_slots = start[:, None] // P + jnp.arange(nC)[None]    # [B, nC]
-    # pages beyond capacity must not overwrite the clipped slot
-    write = (plen > 0) & (raw_slots < S)                      # [B, nC]
-    slots = jnp.clip(raw_slots, 0, S - 1)
-    ppos = start[:, None] + pos_in_chunk[:, 0][None]          # [B, nC]
-
     bidx = jnp.arange(B)[:, None]
+    rc = cache.refcount[bidx, jnp.clip(raw_slots, 0, S - 1)]
+    # pages beyond capacity must not overwrite the last slot, and
+    # shared pages (refcount > 1) belong to the pool — never clobbered
+    write = (plen > 0) & (raw_slots < S) & (rc <= 1)          # [B, nC]
+    # blocked pages scatter to slot S: ``mode='drop'`` discards them
+    # outright, so they neither blend nor duplicate a real slot index
+    # (duplicates would let a dropped page clobber the real write)
+    slots = jnp.where(write, raw_slots, S)
+    ppos = start[:, None] + pos_in_chunk[:, 0][None]          # [B, nC]
     # per-page representative keys over live chunk tokens
     kf = jnp.where(live[..., None, None], kp.astype(jnp.float32), INF)
     rmin_new = kf.min(axis=2)                                 # [B, nC, KV, hd]
     kf = jnp.where(live[..., None, None], kp.astype(jnp.float32), -INF)
     rmax_new = kf.max(axis=2)
 
-    # [B, nC, KV, P, hd] to match the advanced-indexing gather order
+    # [B, nC, KV, P, hd] to match the advanced-indexing scatter order
     kw = jnp.where(live[..., None, None], kp, 0).transpose(0, 1, 3, 2, 4)
     vw = jnp.where(live[..., None, None], vp, 0).transpose(0, 1, 3, 2, 4)
-    w5 = write[:, :, None, None, None]
     k_pages = cache.k_pages.at[bidx, :, slots].set(
-        jnp.where(w5, kw.astype(cache.k_pages.dtype),
-                  cache.k_pages[bidx, :, slots]))  # analysis: allow=paged-gather-outside-kernels -- read half of the masked chunk-write RMW: O(chunk pages), owner module
+        kw.astype(cache.k_pages.dtype), mode="drop")
     v_pages = cache.v_pages.at[bidx, :, slots].set(
-        jnp.where(w5, vw.astype(cache.v_pages.dtype),
-                  cache.v_pages[bidx, :, slots]))  # analysis: allow=paged-gather-outside-kernels -- read half of the masked chunk-write RMW: O(chunk pages), owner module
-    w4 = write[:, :, None, None]
-    rep_min = cache.rep_min.at[bidx, :, slots].set(
-        jnp.where(w4, rmin_new, cache.rep_min[bidx, :, slots]))
-    rep_max = cache.rep_max.at[bidx, :, slots].set(
-        jnp.where(w4, rmax_new, cache.rep_max[bidx, :, slots]))
+        vw.astype(cache.v_pages.dtype), mode="drop")
+    rep_min = cache.rep_min.at[bidx, :, slots].set(rmin_new, mode="drop")
+    rep_max = cache.rep_max.at[bidx, :, slots].set(rmax_new, mode="drop")
     return cache._replace(
         k_pages=k_pages, v_pages=v_pages,
         rep_min=rep_min, rep_max=rep_max,
         priority=cache.priority.at[bidx, slots].set(
-            jnp.where(write, ppos.astype(jnp.float32),
-                      cache.priority[bidx, slots])),
-        page_pos=cache.page_pos.at[bidx, slots].set(
-            jnp.where(write, ppos, cache.page_pos[bidx, slots])),
-        page_len=cache.page_len.at[bidx, slots].set(
-            jnp.where(write, plen, cache.page_len[bidx, slots])),
+            ppos.astype(jnp.float32), mode="drop"),
+        page_pos=cache.page_pos.at[bidx, slots].set(ppos, mode="drop"),
+        page_len=cache.page_len.at[bidx, slots].set(plen, mode="drop"),
         pinned=cache.pinned.at[bidx, slots].set(
-            jnp.where(write, jnp.bool_(pin), cache.pinned[bidx, slots])),
-        cur_len=cache.cur_len + chunk_lens.astype(jnp.int32),
+            jnp.broadcast_to(jnp.bool_(pin), slots.shape), mode="drop"),
+        refcount=cache.refcount.at[bidx, slots].set(
+            jnp.ones(slots.shape, jnp.int32), mode="drop"),
+        cur_len=cache.cur_len + (plen * write).sum(-1).astype(jnp.int32),
     )
 
 
 def _eviction_key(cache: PagedCache, protect_recent: int) -> jnp.ndarray:
     """[B, S] f32 — argmin of this picks the victim slot.
 
-    Free slots are preferred (-INF); pinned pages are hard-protected
-    (+INF).  The active page and pages inside the recent-token window
+    Free slots are preferred (-INF); pinned pages and shared pages
+    (``refcount > 1`` — the pool or another claimant still needs the
+    bytes) are hard-protected (+INF).  The active page and pages
+    inside the recent-token window
     are *softly* protected: when every unpinned page is soft-protected
     (pathologically tight budgets), the soft protections are dropped in
     order (recent first, then active) rather than evicting a pinned
@@ -315,7 +355,8 @@ def _eviction_key(cache: PagedCache, protect_recent: int) -> jnp.ndarray:
     recent_edge = cache.cur_len[:, None] - protect_recent
     in_recent = ((cache.page_pos + cache.page_len) > recent_edge) & ~free
 
-    base = jnp.where(cache.pinned, INF, cache.priority)
+    base = jnp.where(cache.pinned | (cache.refcount > 1),
+                     INF, cache.priority)
     base = jnp.where(free, -INF, base)
     k_recent = jnp.where(in_recent, INF, base)
     k_full = jnp.where(is_active, INF, k_recent)
@@ -348,7 +389,13 @@ def append_token(cache: PagedCache, k_new: jnp.ndarray, v_new: jnp.ndarray,
     while the fused decode chunk advances the others.
 
     The KV write is a single-slot in-place update of the page-major
-    cache (O(P) bytes per kv head) — never a copy of other pages.
+    cache (O(P) bytes per kv head) — never a copy of other pages,
+    except on copy-on-write: a lane whose *active* page is shared
+    (``refcount > 1`` — a parked session or the prefix index still
+    claims its bytes) allocates a private slot first, copies that one
+    page's KV + metadata into it, decrefs the shared slot, and appends
+    into the copy.  The shared page is left bit-exact, and the lane's
+    own view is byte-identical to an unshared lane's.
 
     Returns (cache, evicted_slot [B] i32; -1 where no eviction happened
     — i.e. a free slot was used, the active page had room, or the lane
@@ -364,45 +411,72 @@ def append_token(cache: PagedCache, k_new: jnp.ndarray, v_new: jnp.ndarray,
     active_idx = jnp.where(have_active, active, 0)
     active_len = cache.page_len[barange, active_idx]
     active_full = jnp.where(have_active, active_len >= P, True)
+    active_shared = have_active & \
+        (cache.refcount[barange, active_idx] > 1)
 
-    need_alloc = active_full & wm
+    # copy-on-write: room left in the active page, but its bytes are
+    # shared — divert the append into a freshly allocated private copy
+    cow = ~active_full & active_shared & wm
+    need_alloc = (active_full | active_shared) & wm
     evict_key = _eviction_key(cache, protect_recent)
     victim = jnp.argmin(evict_key, axis=1).astype(jnp.int32)
     victim_was_free = cache.page_pos[barange, victim] < 0
     evicted = jnp.where(need_alloc & ~victim_was_free, victim, -1)
 
     slot = jnp.where(need_alloc, victim, active_idx)
-    # reset the victim slot where allocating, then write the new token
+    fresh = need_alloc & ~cow
+    # reset the victim slot where allocating (or clone the shared
+    # active page into it where copying-on-write), then write the token
     page_pos = cache.page_pos.at[barange, slot].set(
-        jnp.where(need_alloc, cache.cur_len, cache.page_pos[barange, slot]))
+        jnp.where(fresh, cache.cur_len,
+                  jnp.where(cow, cache.page_pos[barange, active_idx],
+                            cache.page_pos[barange, slot])))
     page_len = cache.page_len.at[barange, slot].set(
-        jnp.where(need_alloc, 0, cache.page_len[barange, slot]))
+        jnp.where(fresh, 0,
+                  jnp.where(cow, active_len,
+                            cache.page_len[barange, slot])))
     # NB mixed advanced/basic indexing [barange, :, slot] broadcasts the
     # advanced axes to the front: the result is [B, KV, ...].
+    c2 = cow[:, None, None]
     rep_min = cache.rep_min.at[barange, :, slot].set(
-        jnp.where(need_alloc[:, None, None], INF,
-                  cache.rep_min[barange, :, slot]))
+        jnp.where(fresh[:, None, None], INF,
+                  jnp.where(c2, cache.rep_min[barange, :, active_idx],
+                            cache.rep_min[barange, :, slot])))
     rep_max = cache.rep_max.at[barange, :, slot].set(
-        jnp.where(need_alloc[:, None, None], -INF,
-                  cache.rep_max[barange, :, slot]))
+        jnp.where(fresh[:, None, None], -INF,
+                  jnp.where(c2, cache.rep_max[barange, :, active_idx],
+                            cache.rep_max[barange, :, slot])))
     priority = cache.priority.at[barange, slot].set(
-        jnp.where(need_alloc, new_page_priority,
-                  cache.priority[barange, slot]))
+        jnp.where(fresh, new_page_priority,
+                  jnp.where(cow, cache.priority[barange, active_idx],
+                            cache.priority[barange, slot])))
     pinned = cache.pinned.at[barange, slot].set(
-        jnp.where(need_alloc,
+        jnp.where(fresh,
                   cache.cur_len < pin_below_pos,
-                  cache.pinned[barange, slot]))
-    # zero the KV of a reset page so stale tokens can't leak through
+                  jnp.where(cow, cache.pinned[barange, active_idx],
+                            cache.pinned[barange, slot])))
+    # the allocated slot is privately owned; a COW source loses this
+    # lane's claim (the other claimants keep theirs)
+    refcount = cache.refcount.at[barange, slot].set(
+        jnp.where(need_alloc, 1, cache.refcount[barange, slot]))
+    refcount = refcount.at[barange, active_idx].add(
+        -(cow.astype(jnp.int32)))
+    # zero the KV of a reset page so stale tokens can't leak through;
+    # a COW page instead receives the shared page's exact bytes
+    c4 = cow[:, None, None, None]
+    f4 = fresh[:, None, None, None]
     k_pages = cache.k_pages.at[barange, :, slot].set(
-        jnp.where(need_alloc[:, None, None, None], 0,
-                  cache.k_pages[barange, :, slot]))  # analysis: allow=paged-gather-outside-kernels -- page-reset RMW reads exactly one page per lane, owner module
+        jnp.where(f4, 0,
+                  jnp.where(c4, cache.k_pages[barange, :, active_idx],  # analysis: allow=paged-gather-outside-kernels -- COW clone reads one shared page per lane, owner module
+                            cache.k_pages[barange, :, slot])))  # analysis: allow=paged-gather-outside-kernels -- page-reset RMW reads one page per lane, owner module
     v_pages = cache.v_pages.at[barange, :, slot].set(
-        jnp.where(need_alloc[:, None, None, None], 0,
-                  cache.v_pages[barange, :, slot]))  # analysis: allow=paged-gather-outside-kernels -- page-reset RMW reads exactly one page per lane, owner module
+        jnp.where(f4, 0,
+                  jnp.where(c4, cache.v_pages[barange, :, active_idx],  # analysis: allow=paged-gather-outside-kernels -- COW clone reads one shared page per lane, owner module
+                            cache.v_pages[barange, :, slot])))  # analysis: allow=paged-gather-outside-kernels -- page-reset RMW reads one page per lane, owner module
 
     # masked lanes write their existing byte back at a safe offset —
     # a bit-exact no-op — so the scatter shape stays static.
-    offset = jnp.where(wm, jnp.where(need_alloc, 0, active_len), 0)
+    offset = jnp.where(wm, jnp.where(fresh, 0, active_len), 0)
     w3 = wm[:, None, None]                     # [B,1,1] vs [B,KV,hd]
     k_pages = k_pages.at[barange, :, slot, offset].set(
         jnp.where(w3, k_new.astype(k_pages.dtype),
@@ -421,7 +495,7 @@ def append_token(cache: PagedCache, k_new: jnp.ndarray, v_new: jnp.ndarray,
         k_pages=k_pages, v_pages=v_pages,
         rep_min=rep_min, rep_max=rep_max,
         priority=priority, page_pos=page_pos, page_len=page_len,
-        pinned=pinned,
+        pinned=pinned, refcount=refcount,
         active_slot=jnp.where(wm, slot, cache.active_slot),
         cur_len=cache.cur_len + wm.astype(jnp.int32),
     )

@@ -71,6 +71,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.config import ATTN, ModelConfig, RaasConfig, ServeConfig
+from repro.core import page_pool as pool
 from repro.core import paged_cache as pc
 from repro.core.policy_base import get_policy
 from repro.kernels import ops
@@ -99,6 +100,11 @@ class Request:
     prompt: np.ndarray            # [prompt_len] int32
     max_new_tokens: int
     eos_id: Optional[int] = None
+    # multi-turn conversation id (page_pool.generate_session_id): a
+    # follow-up request that resends the conversation with the same id
+    # resumes the parked KV of the prior turn instead of re-prefilling
+    # it.  Each turn is a FRESH Request object carrying the same id.
+    session_id: Optional[str] = None
     # filled by the engine
     output: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
@@ -162,6 +168,18 @@ class Engine:
         self.chunked_prefill = (
             all(m == "attn" and f != "moe" for m, f in cfg.period)
             and cfg.n_codebooks == 1)
+        # Prefix caching / sessions ride the chunked-prefill path only:
+        # a mount aliases contiguous prefill-region slots in place,
+        # which the one-shot fallback's host-side row splice would
+        # clobber (and SSM state has no page identity to alias).
+        self.prefix_caching = bool(serve.prefix_caching
+                                   and self.chunked_prefill
+                                   and cfg.has_attention)
+        # admission checks capacity against the *policy's* slot count,
+        # not just max_prefill: a lane physically holds n_slots pages.
+        self.n_slots = (M.cache_spec(cfg, raas, serve.max_seq,
+                                     serve.max_prefill).n_slots
+                        if cfg.has_attention else None)
 
         B = self.B
         if mesh is None and serve.mesh:
@@ -218,6 +236,18 @@ class Engine:
         self.phase = np.zeros(B, np.int32)          # FREE/PREFILL/DECODE
         self.slot_req: List[Optional[Request]] = [None] * B
         self._pending_reset = np.zeros(B, bool)     # lanes to recycle
+        # page-pool host state: the prefix index, the parked-session
+        # map, and the per-lane pending transition queue (flushed as
+        # ONE batched dispatch at the next prefill step; a second op
+        # on a lane that already has one flushes first, so per-lane
+        # op order is exactly the order the engine queued).
+        self.pool = pool.PrefixIndex(raas.page_size)
+        self.sessions: dict = {}                    # session_id -> lane
+        self._lane_session: List[Optional[str]] = [None] * B
+        self._pending_op = np.zeros(B, np.int32)    # pool.OP_*
+        self._pending_a0 = np.zeros(B, np.int32)
+        self._pending_a1 = np.zeros(B, np.int32)
+        self._pending_clones: List[tuple] = []      # (src, dst, keep)
         self.prefill_pos = np.zeros(B, np.int32)    # prompt tokens ingested
         self.prompt_len = np.zeros(B, np.int32)
         self.last_token = np.zeros(B, np.int32)
@@ -233,6 +263,13 @@ class Engine:
         self.traces = 0             # chunk-fn compilations
         self.prefill_traces = 0     # prefill-chunk-fn compilations
                                     # (bounded by the ctx_pages buckets)
+        # prefix-cache accounting: prompt tokens served from resident
+        # pages instead of prefill compute, split by mechanism.
+        self.prefix_cached_tokens = 0
+        self.prefix_mounts = 0      # zero-copy parked-lane mounts
+        self.prefix_clones = 0      # busy-donor page copies
+        self.session_hits = 0       # mounts that resumed a session
+        self.pool_dispatches = 0    # transition + clone dispatches
         # analytic prefill attention traffic (ops.flash_prefill_cost,
         # exact from the kernel grid x the per-dispatch chunk-resume
         # table, summed over attention layers): the paged in-place
@@ -270,6 +307,20 @@ class Engine:
                             jnp.zeros_like(x), x), bc.mamba))
                 for bc in cache.per_pos))
 
+        def _transition(cache, op, a0, a1):
+            # metadata-only pool transitions, batched over lanes;
+            # mamba is None on the (all-attn) prefix-caching path.
+            return M.ModelCache(per_pos=tuple(
+                bc._replace(attn=None if bc.attn is None
+                            else pool.transition_lanes(bc.attn, op, a0, a1))
+                for bc in cache.per_pos))
+
+        def _clone(cache, src, dst, keep):
+            return M.ModelCache(per_pos=tuple(
+                bc._replace(attn=None if bc.attn is None
+                            else pool.clone_prefix(bc.attn, src, dst, keep))
+                for bc in cache.per_pos))
+
         def _prefill_chunk(params, cache, tokens, chunk_lens, start,
                            ctx_pages):
             self.prefill_traces += 1    # runs at trace time only
@@ -297,6 +348,10 @@ class Engine:
         # XLA alias it in place instead of holding cache x2 live
         # (repro.analysis's donation audit enforces this stays true)
         self._reset_fn = jax.jit(_reset, donate_argnums=(0,),
+                                 **_out(cache_shd))
+        self._transition_fn = jax.jit(_transition, donate_argnums=(0,),
+                                      **_out(cache_shd))
+        self._clone_fn = jax.jit(_clone, donate_argnums=(0,),
                                  **_out(cache_shd))
         self._prefill_chunk_fn = jax.jit(
             _prefill_chunk, static_argnames=("ctx_pages",),
@@ -350,9 +405,24 @@ class Engine:
         """Register a request on a free lane.  No compute happens here:
         the prompt is ingested by subsequent :meth:`prefill_step`
         dispatches (interleaved with decode), so admission never stalls
-        active lanes.  Raises if no lane is free or the prompt exceeds
-        the lane's pinned-prefill capacity (the old engine silently
-        truncated such prompts)."""
+        active lanes.  Raises if no lane is free, the request was
+        already served, or the prompt exceeds the lane's capacity
+        (``max_prefill`` *and* the policy's physical slot count — the
+        old engine silently truncated / silently clipped these).
+
+        With prefix caching on, admission consults the prefix index:
+        a prompt whose leading pages are parked on a free lane mounts
+        them in place (zero-copy — only refcounts move); a busy
+        donor's pages are cloned once (O(prefix bytes), no model
+        compute); either way prefill resumes at the first un-cached
+        token.  A fresh :attr:`Request.session_id` marks the lane for
+        parking at finish; a returning id resumes the conversation."""
+        if req.done or req.output:
+            raise ValueError(
+                f"request uid={req.uid} was already served (done={req.done}, "
+                f"{len(req.output)} output tokens) — re-admitting would "
+                "append to stale output.  Each turn is a fresh Request; "
+                "pass the same session_id to resume a conversation.")
         free = self.free_slots()
         if not free:
             raise RuntimeError("no free slot")
@@ -364,21 +434,179 @@ class Engine:
                 f"to max_seq={self.max_seq} — to serve longer prompts)")
         if L < 1:
             raise ValueError("empty prompt")
-        slot = free[0]
-        # the on-device lane reset is deferred and batched: all lanes
-        # admitted at this chunk boundary are recycled in ONE dispatch
-        # at the next prefill step.
-        self._pending_reset[slot] = True
+        P = self.raas.page_size
+        if self.n_slots is not None and -(-L // P) > self.n_slots:
+            raise ValueError(
+                f"prompt of {L} tokens needs {-(-L // P)} pages but the "
+                f"policy budget provisions only n_slots={self.n_slots} "
+                "per lane — ingest would clip; raise budget_tokens or "
+                "lower max_prefill")
+        sid = None
+        if req.session_id is not None:
+            sid = pool.validate_session_id(req.session_id)
+
+        slot, keep = None, 0
+        if self.prefix_caching:
+            slot, keep = self._admit_via_pool(req, sid, free)
+        if slot is None:
+            slot = free[0]
+            # the on-device lane reset is deferred and batched: all
+            # lanes admitted at this chunk boundary are recycled in ONE
+            # dispatch at the next prefill step.
+            if self.prefix_caching:
+                self._drop_parked(slot)
+                self._queue_op(slot, pool.OP_RESET)
+            else:
+                self._pending_reset[slot] = True
         self.slot_req[slot] = req
         self.phase[slot] = PREFILL
-        self.prefill_pos[slot] = 0
+        self.prefill_pos[slot] = keep
         self.prompt_len[slot] = L
         self.active[slot] = False
         self.eos_id[slot] = -1 if req.eos_id is None else req.eos_id
         self.max_new[slot] = req.max_new_tokens
 
+    # -- page-pool admission ---------------------------------------------------
+    def _admit_via_pool(self, req: Request, sid: Optional[str],
+                        free: List[int]):
+        """Pick the lane and cached-prefix length for ``req``.  Returns
+        ``(slot, keep_tokens)`` with the mount / clone op queued, or
+        ``(None, 0)`` when nothing is cached (caller resets a lane)."""
+        P = self.raas.page_size
+        L = len(req.prompt)
+        prompt = np.asarray(req.prompt, np.int32)
+        match = self.pool.lookup(prompt)
+        if match is None:
+            return None, 0
+        donor, n_pages = match
+        # always leave at least one token to ingest: the final prefill
+        # chunk is what samples the request's first token.
+        keep = min(n_pages * P, ((L - 1) // P) * P)
+        if keep <= 0:
+            return None, 0
+        if sid is not None and self.sessions.get(sid) == donor:
+            self.session_hits += 1
+        if self.phase[donor] == FREE:
+            # zero-copy: mount the parked pages where they already live
+            if keep // P < self.pool.covered_pages(donor):
+                self.pool.truncate(donor, keep // P)
+            self._consume_session(donor)
+            self._queue_op(donor, pool.OP_MOUNT, a0=keep)
+            self.prefix_mounts += 1
+            slot = donor
+        else:
+            # busy donor: copy its prefix pages into a free lane once —
+            # O(prefix bytes), still no prefill compute for them
+            slot = self._pick_lane(free)
+            self._drop_parked(slot)
+            self._pending_reset[slot] = False
+            self._pending_op[slot] = pool.OP_NOP
+            self._pending_clones.append((donor, slot, keep))
+            self.prefix_clones += 1
+        self.prefix_cached_tokens += keep
+        return slot, keep
+
+    def _pick_lane(self, free: List[int]) -> int:
+        """Prefer free lanes with no parked prefix — parked pages are
+        future cache hits; evict them only when every free lane parks."""
+        for i in free:
+            if self.pool.covered_pages(i) == 0:
+                return i
+        return free[0]
+
+    def _drop_parked(self, lane: int) -> None:
+        """Forget anything parked on ``lane`` (about to be wiped)."""
+        self.pool.drop_lane(lane)
+        self._consume_session(lane)
+
+    def _consume_session(self, lane: int) -> None:
+        sid = self._lane_session[lane]
+        if sid is not None:
+            self.sessions.pop(sid, None)
+            self._lane_session[lane] = None
+
+    def _queue_op(self, lane: int, op: int, a0: int = 0,
+                  a1: int = 0) -> None:
+        """Queue one pool transition for ``lane``.  A lane admits only
+        one pending op: queuing a second flushes the batch first, so
+        per-lane ordering is exactly program order."""
+        if self._pending_op[lane] != pool.OP_NOP:
+            self._flush_pool_ops()
+        self._pending_op[lane] = op
+        self._pending_a0[lane] = a0
+        self._pending_a1[lane] = a1
+
+    def _flush_pool_ops(self) -> None:
+        """Apply pending transitions (one batched dispatch) and clones
+        (one dispatch each — rare: only busy-donor admissions)."""
+        if (self._pending_op != pool.OP_NOP).any():
+            self.pool_dispatches += 1
+            self.cache = self._transition_fn(
+                self.cache, self._dev(self._pending_op),
+                self._dev(self._pending_a0), self._dev(self._pending_a1))
+            self._pending_op[:] = pool.OP_NOP
+            self._pending_a0[:] = 0
+            self._pending_a1[:] = 0
+        while self._pending_clones:
+            src, dst, keep = self._pending_clones.pop(0)
+            self.pool_dispatches += 1
+            self.cache = self._clone_fn(self.cache, jnp.int32(src),
+                                        jnp.int32(dst), jnp.int32(keep))
+
+    def _register_prefix(self, lane: int) -> None:
+        """At prefill completion: register the prompt's full pages as a
+        shareable prefix and INCREF the newly covered slots (the
+        index's claim, released only by eviction of the parked lane)."""
+        prev = self.pool.covered_pages(lane)
+        new = self.pool.register(lane, np.asarray(
+            self.slot_req[lane].prompt, np.int32))
+        if new > prev:
+            self._queue_op(lane, pool.OP_INCREF, a0=prev, a1=new)
+
+    def _contiguous_pages(self, lane: int) -> int:
+        """Full pages of ``lane`` that sit in slot == position order —
+        the resumable prefix.  Decode pages stay contiguous until the
+        first real eviction, so this is usually every full page.  One
+        small host transfer; called once per finishing session."""
+        attn = next(bc.attn for bc in self.cache.per_pos
+                    if bc.attn is not None)
+        # stacked leaves [n_periods, B, ...]: layer 0 is authoritative
+        ppos = np.asarray(attn.page_pos[0, lane])
+        plen = np.asarray(attn.page_len[0, lane])
+        cur = int(np.asarray(attn.cur_len[0, lane]))
+        P = self.raas.page_size
+        n = 0
+        while (n + 1) * P <= cur and n < len(ppos) \
+                and ppos[n] == n * P and plen[n] == P:
+            n += 1
+        return n
+
+    def _park_lane(self, lane: int, req: Request) -> None:
+        """Release the finishing request's claims; if it carries a
+        session id, first extend the lane's registration over the whole
+        conversation (prompt + emitted output) so the follow-up turn
+        can mount it instead of re-prefilling."""
+        sid = req.session_id
+        if sid is not None:
+            hist = np.concatenate([np.asarray(req.prompt, np.int32),
+                                   np.asarray(req.output, np.int32)])
+            full = min(len(hist) // self.raas.page_size,
+                       self._contiguous_pages(lane))
+            prev = self.pool.covered_pages(lane)
+            if full > prev:
+                new = self.pool.register(
+                    lane, hist[:full * self.raas.page_size])
+                if new > prev:
+                    self._queue_op(lane, pool.OP_INCREF, a0=prev, a1=new)
+            self._consume_session(lane)
+            self.sessions[sid] = lane
+            self._lane_session[lane] = sid
+        self._queue_op(lane, pool.OP_RELEASE)
+
     def _finish(self, slot: int) -> Request:
         req = self.slot_req[slot]
+        if self.prefix_caching:
+            self._park_lane(slot, req)
         req.done = True
         self.slot_req[slot] = None
         self.phase[slot] = FREE
@@ -422,6 +650,10 @@ class Engine:
             # no reset dispatch is needed on the fallback path
             self._pending_reset[:] = False
             return self._prefill_oneshot_step(lanes)
+        if self.prefix_caching:
+            # apply queued pool transitions (mount/reset/incref/release)
+            # and any busy-donor prefix clones before touching lanes
+            self._flush_pool_ops()
         if self._pending_reset.any():
             self.cache = self._reset_fn(
                 self.cache, self._dev(self._pending_reset))
@@ -459,6 +691,9 @@ class Engine:
             # one blocking round-trip per completing lane
             first = np.asarray(jnp.argmax(logits, axis=-1))     # [B]
             for i in done_lanes:
+                if self.prefix_caching:
+                    # the freshly ingested prompt is now shareable
+                    self._register_prefix(i)
                 req = self._start_decode(i, int(first[i]))
                 if req is not None:
                     finished.append(req)

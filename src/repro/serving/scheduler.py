@@ -23,10 +23,13 @@ the longest chain-of-thought.
 
 Completion tracking is O(1) per finished request: both dispatch kinds
 return the requests they finished (each exactly once — a finished lane
-is freed before it can finish again).  ``max_steps`` bounds *decode
-scan steps issued*; there is no heuristic step-bound fudge — every loop
-iteration provably makes progress (admission, prefill tokens, or decode
-steps), so the loop terminates without one.
+is freed before it can finish again).  ``max_steps`` bounds *executed*
+decode scan steps — the loop reads the engine's own
+``steps_executed`` counter delta, so chunks whose lanes all finish
+early are charged for what they ran, not for the full chunk length.
+There is no heuristic step-bound fudge — every loop iteration provably
+makes progress (admission, prefill tokens, or decode steps), so the
+loop terminates without one.
 
 The loop is mesh-agnostic by construction: it only talks to the engine
 through admission, the two dispatch kinds, and host-side lane mirrors,
@@ -49,8 +52,9 @@ def serve(engine: Engine, requests: Iterable[Request],
           max_steps: int = 100_000,
           chunk_steps: Optional[int] = None) -> List[Request]:
     """Run ``requests`` to completion.  ``max_steps`` bounds the total
-    number of decode scan steps issued; ``chunk_steps`` overrides the
-    engine's decode chunk length."""
+    number of decode scan steps actually executed (``steps_executed``
+    delta — exact, not dispatches x chunk); ``chunk_steps`` overrides
+    the engine's decode chunk length."""
     queue = deque(requests)
     done: List[Request] = []
     steps_issued = 0
@@ -63,7 +67,7 @@ def serve(engine: Engine, requests: Iterable[Request],
         done.extend(engine.prefill_step())
         if steps_issued >= max_steps:
             break
-        d0 = engine.dispatches
+        s0 = engine.steps_executed
         done.extend(engine.step_chunk(chunk_steps))
-        steps_issued += (engine.dispatches - d0) * chunk
+        steps_issued += engine.steps_executed - s0
     return done

@@ -1,0 +1,6 @@
+"""Fixture: raw refcount mutation outside the pool modules — exactly
+one finding (claims move only via page_pool lane transitions)."""
+
+
+def steal_claim(cache, lane, slot):
+    return cache.refcount.at[lane, slot].add(1)  # FIRE

@@ -47,6 +47,7 @@ def _fire_line(path: Path) -> int:
     ("serving/bad_item.py", "host-sync-in-dispatch-loop"),
     ("bad_paged_gather.py", "paged-gather-outside-kernels"),
     ("core/policies/bad_policy.py", "policy-imports"),
+    ("serving/bad_refcount.py", "pool-refcount-outside-pool"),
 ])
 def test_violation_fixture_fires_exactly_once(rel, rule):
     path = FIXTURES / rel

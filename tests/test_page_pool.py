@@ -1,0 +1,429 @@
+"""Page-pool tests: refcount claims, lane transitions, copy-on-write,
+the prefix index, and session ids.
+
+The load-bearing property (hypothesis when available, a deterministic
+multi-seed walk otherwise): under protocol-legal sequences of appends
+and lane transitions, a slot whose ``refcount`` exceeds one — a parked
+session or the prefix index still needs its bytes — is never evicted,
+overwritten or reset; its KV bytes and metadata are bit-frozen until
+its claims drop.  Copy-on-write is pinned separately: appending into a
+shared active page diverts into a private copy whose bytes match an
+unshared control lane exactly, while the shared page stays bit-exact.
+"""
+import functools
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:
+    _SKIP = pytest.mark.skip(reason="hypothesis not installed")
+
+    def given(*_a, **_k):
+        def deco(fn):
+            @_SKIP
+            @functools.wraps(fn)
+            def stub(*args, **kwargs):
+                raise AssertionError("unreachable: test is skipped")
+            return stub
+        return deco
+
+    def settings(*_a, **_k):
+        return lambda fn: fn
+
+    class _Strategies:
+        def __getattr__(self, _name):
+            return lambda *a, **k: None
+
+    st = _Strategies()
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import page_pool as pool
+from repro.core import paged_cache as pc
+
+S, P, KV, HD = 8, 4, 2, 4
+SPEC = pc.CacheSpec(n_slots=S, page_size=P, n_kv_heads=KV, head_dim=HD)
+
+
+def _prefilled(rng, B=2, length=8):
+    """Fresh cache with ``length`` prefill tokens per lane."""
+    cache = pc.init_cache(SPEC, B)
+    k = rng.standard_normal((B, length, KV, HD)).astype(np.float32)
+    v = rng.standard_normal((B, length, KV, HD)).astype(np.float32)
+    return pc.ingest_prefill(cache, jnp.asarray(k), jnp.asarray(v),
+                             jnp.full((B,), length, jnp.int32))
+
+
+def _lane_op(cache, lane, op, a0=0, a1=0):
+    """Apply one transition to one lane (the others NOP)."""
+    B = cache.cur_len.shape[-1]
+    ops = np.zeros(B, np.int32)
+    ops[lane] = op
+    av0, av1 = np.zeros(B, np.int32), np.zeros(B, np.int32)
+    av0[lane], av1[lane] = a0, a1
+    return pool.transition_lanes(cache, jnp.asarray(ops),
+                                 jnp.asarray(av0), jnp.asarray(av1))
+
+
+def _append(cache, rng, lanes=None):
+    B = cache.cur_len.shape[-1]
+    k = rng.standard_normal((B, KV, HD)).astype(np.float32)
+    v = rng.standard_normal((B, KV, HD)).astype(np.float32)
+    wm = None
+    if lanes is not None:
+        wm = np.zeros(B, bool)
+        wm[list(lanes)] = True
+        wm = jnp.asarray(wm)
+    prio = cache.cur_len.astype(jnp.float32)
+    return pc.append_token(cache, jnp.asarray(k), jnp.asarray(v), prio,
+                           write_mask=wm)
+
+
+# ---------------------------------------------------------------------------
+# transition op semantics
+# ---------------------------------------------------------------------------
+def test_incref_release_park_cycle():
+    rng = np.random.default_rng(0)
+    cache = _prefilled(rng, B=2, length=8)          # 2 full pages, rc=1
+    cache = _lane_op(cache, 0, pool.OP_INCREF, 0, 2)
+    np.testing.assert_array_equal(cache.refcount[0], [2, 2] + [0] * 6)
+    k_before = np.asarray(cache.k_pages[0])
+
+    cache = _lane_op(cache, 0, pool.OP_RELEASE)
+    # index claim survives: pages parked, bytes + layout intact
+    np.testing.assert_array_equal(cache.refcount[0], [1, 1] + [0] * 6)
+    np.testing.assert_array_equal(cache.page_len[0, :2], [P, P])
+    np.testing.assert_array_equal(np.asarray(cache.k_pages[0]), k_before)
+    assert int(cache.cur_len[0]) == 0 and int(cache.active_slot[0]) == -1
+    # lane 1 (NOP throughout) is untouched
+    np.testing.assert_array_equal(cache.refcount[1], [1, 1] + [0] * 6)
+    assert int(cache.cur_len[1]) == 8
+
+    # release without an index claim wipes the lane entirely
+    cache = _lane_op(cache, 1, pool.OP_RELEASE)
+    np.testing.assert_array_equal(cache.refcount[1], 0)
+    np.testing.assert_array_equal(cache.page_len[1], 0)
+    np.testing.assert_array_equal(cache.page_pos[1], -1)
+
+
+def test_mount_is_byte_identical_to_fresh_prefill():
+    rng = np.random.default_rng(1)
+    cache = _prefilled(rng, B=2, length=8)
+    control = cache                                  # lane state pre-park
+    cache = _lane_op(cache, 0, pool.OP_INCREF, 0, 2)
+    cache = _lane_op(cache, 0, pool.OP_RELEASE)      # park
+    cache = _lane_op(cache, 0, pool.OP_MOUNT, 8)     # resume all 8 tokens
+
+    for name in ("k_pages", "v_pages", "rep_min", "rep_max", "priority",
+                 "page_pos", "page_len", "pinned", "active_slot",
+                 "cur_len"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(cache, name)[0]),
+            np.asarray(getattr(control, name)[0]), err_msg=name)
+    # mounted pages carry request + index claims
+    np.testing.assert_array_equal(cache.refcount[0], [2, 2] + [0] * 6)
+
+
+def test_mount_truncation_wipes_unkept_pages():
+    rng = np.random.default_rng(2)
+    cache = _prefilled(rng, B=1, length=8)
+    cache = _lane_op(cache, 0, pool.OP_INCREF, 0, 2)
+    cache = _lane_op(cache, 0, pool.OP_RELEASE)
+    cache = _lane_op(cache, 0, pool.OP_MOUNT, 4)     # keep 1 of 2 pages
+    np.testing.assert_array_equal(cache.refcount[0], [2] + [0] * 7)
+    assert int(cache.page_len[0, 1]) == 0
+    assert int(cache.page_pos[0, 1]) == -1
+    assert int(cache.cur_len[0]) == 4
+
+
+def test_transitions_broadcast_over_stacked_leaves():
+    rng = np.random.default_rng(3)
+    cache = _prefilled(rng, B=2, length=8)
+    stacked = jax.tree.map(lambda x: jnp.stack([x, x]), cache)
+    out = _lane_op(stacked, 0, pool.OP_INCREF, 0, 2)
+    flat = _lane_op(cache, 0, pool.OP_INCREF, 0, 2)
+    for got, want in zip(jax.tree.leaves(out), jax.tree.leaves(flat)):
+        np.testing.assert_array_equal(np.asarray(got[0]),
+                                      np.asarray(want))
+        np.testing.assert_array_equal(np.asarray(got[1]),
+                                      np.asarray(want))
+
+
+def test_clone_prefix_copies_src_and_leaves_it_untouched():
+    rng = np.random.default_rng(4)
+    cache = _prefilled(rng, B=2, length=8)
+    cache, _ = _append(cache, rng, lanes=[1])        # dirty the dst lane
+    src_before = jax.tree.map(lambda x: np.asarray(x[0]), cache)
+
+    out = pool.clone_prefix(cache, jnp.int32(0), jnp.int32(1),
+                            jnp.int32(8))
+    # dst's first 2 slots == src's, on every per-slot field (the slot
+    # axis sits right after KV for the 4d/5d leaves, first for 2d ones)
+    slot_prefix = dict(k_pages=np.s_[:, :2], v_pages=np.s_[:, :2],
+                       rep_min=np.s_[:, :2], rep_max=np.s_[:, :2],
+                       priority=np.s_[:2], page_pos=np.s_[:2],
+                       page_len=np.s_[:2], pinned=np.s_[:2])
+    for name, sl in slot_prefix.items():
+        got = np.asarray(getattr(out, name)[1])[sl]
+        want = np.asarray(getattr(out, name)[0])[sl]
+        np.testing.assert_array_equal(got, want, err_msg=name)
+    # src lane is bit-exactly what it was
+    for name, want in src_before._asdict().items():
+        np.testing.assert_array_equal(np.asarray(getattr(out, name)[0]),
+                                      want, err_msg=name)
+    # dst owns a private copy: one claim, clean tail, fresh lane state
+    np.testing.assert_array_equal(out.refcount[1], [1, 1] + [0] * 6)
+    np.testing.assert_array_equal(out.page_pos[1, 2:], -1)
+    assert int(out.cur_len[1]) == 8
+    assert int(out.active_slot[1]) == -1
+
+
+# ---------------------------------------------------------------------------
+# eviction + COW honor shared slots
+# ---------------------------------------------------------------------------
+def test_eviction_skips_shared_slots():
+    """The argmin-priority victim must never be a ``refcount > 1`` slot,
+    even when it has strictly the lowest priority."""
+    rng = np.random.default_rng(5)
+    cache = _prefilled(rng, B=1, length=4)           # slot 0 pinned
+    for _ in range(8):                               # fill slots 1, 2
+        cache, _ = _append(cache, rng)
+    # share slot 1 (a full, unpinned decode page with lowest priority)
+    cache = _lane_op(cache, 0, pool.OP_INCREF, 1, 2)
+    cache = cache._replace(
+        priority=cache.priority.at[0, 1].set(-100.0))
+    assert int(cache.refcount[0, 1]) == 2
+    shared_k = np.asarray(cache.k_pages[0, :, 1])
+
+    evicted_slots = []
+    for _ in range(3 * S):                           # overflow capacity
+        cache, ev = _append(cache, rng)
+        evicted_slots.append(int(ev[0]))
+    assert any(e >= 0 for e in evicted_slots), "no eviction exercised"
+    assert 1 not in evicted_slots
+    np.testing.assert_array_equal(np.asarray(cache.k_pages[0, :, 1]),
+                                  shared_k)
+    assert int(cache.page_len[0, 1]) == P
+
+
+def test_cow_diverts_append_and_matches_unshared_control():
+    """Lanes 0 and 1 hold identical KV; lane 0's active page is shared.
+    Appending the same token to both must (a) leave the shared page
+    bit-exact, (b) produce a private copy on lane 0 whose bytes equal
+    lane 1's in-place page — the unshared control."""
+    rng = np.random.default_rng(6)
+    cache = _prefilled(rng, B=2, length=4)
+    # two decode tokens -> both lanes have active slot 1, page_len 2
+    kv = [(rng.standard_normal((KV, HD)).astype(np.float32),
+           rng.standard_normal((KV, HD)).astype(np.float32))
+          for _ in range(3)]
+    for k1, v1 in kv[:2]:
+        k = jnp.asarray(np.stack([k1, k1]))
+        v = jnp.asarray(np.stack([v1, v1]))
+        cache, _ = pc.append_token(cache, k, v,
+                                   cache.cur_len.astype(jnp.float32))
+    assert int(cache.active_slot[0]) == int(cache.active_slot[1]) == 1
+    cache = _lane_op(cache, 0, pool.OP_INCREF, 1, 2)  # share lane 0's
+    shared_before = np.asarray(cache.k_pages[0, :, 1])
+
+    k3, v3 = kv[2]
+    cache, ev = pc.append_token(cache, jnp.asarray(np.stack([k3, k3])),
+                                jnp.asarray(np.stack([v3, v3])),
+                                cache.cur_len.astype(jnp.float32))
+    s0, s1 = int(cache.active_slot[0]), int(cache.active_slot[1])
+    assert s0 != 1, "COW did not divert the append"
+    assert s1 == 1, "control lane should append in place"
+    # shared page untouched, lane's claim moved off it
+    np.testing.assert_array_equal(np.asarray(cache.k_pages[0, :, 1]),
+                                  shared_before)
+    assert int(cache.refcount[0, 1]) == 1
+    assert int(cache.refcount[0, s0]) == 1
+    # byte parity with the unshared control lane
+    np.testing.assert_array_equal(np.asarray(cache.k_pages[0, :, s0]),
+                                  np.asarray(cache.k_pages[1, :, s1]))
+    np.testing.assert_array_equal(np.asarray(cache.v_pages[0, :, s0]),
+                                  np.asarray(cache.v_pages[1, :, s1]))
+    for name in ("page_pos", "page_len", "priority", "pinned"):
+        assert np.asarray(getattr(cache, name))[0, s0] \
+            == np.asarray(getattr(cache, name))[1, s1], name
+    assert int(cache.cur_len[0]) == int(cache.cur_len[1]) == 7
+
+
+# ---------------------------------------------------------------------------
+# satellite: over-capacity ingest stays accounted
+# ---------------------------------------------------------------------------
+def test_overflow_ingest_clips_cur_len_with_tokens_cached():
+    """A chunk larger than the remaining capacity drops the overflow
+    pages entirely — ``cur_len == tokens_cached()`` still holds, and no
+    resident page is clobbered by a duplicate scatter index."""
+    rng = np.random.default_rng(7)
+    cache = _prefilled(rng, B=1, length=24)          # 6 of 8 slots
+    k = rng.standard_normal((1, 16, KV, HD)).astype(np.float32)
+    v = rng.standard_normal((1, 16, KV, HD)).astype(np.float32)
+    out = pc.ingest_prefill_chunk(cache, jnp.asarray(k), jnp.asarray(v),
+                                  jnp.asarray([16], jnp.int32))
+    assert int(out.cur_len[0]) == 32                 # 24 + 2 pages fit
+    assert int(out.tokens_cached()[0]) == int(out.cur_len[0])
+    # the last resident slot holds the page that belongs there, not the
+    # clipped overflow
+    np.testing.assert_array_equal(
+        np.asarray(out.k_pages[0, :, 7]),
+        np.asarray(k[0, 4:8].transpose(1, 0, 2)))
+
+
+def test_ingest_refuses_to_overwrite_shared_slots():
+    rng = np.random.default_rng(8)
+    cache = _prefilled(rng, B=1, length=4)
+    cache = _lane_op(cache, 0, pool.OP_INCREF, 0, 1)
+    cache = _lane_op(cache, 0, pool.OP_RELEASE)      # parked page, rc=1
+    cache = _lane_op(cache, 0, pool.OP_INCREF, 0, 1)  # second claim
+    shared_k = np.asarray(cache.k_pages[0, :, 0])
+    k = rng.standard_normal((1, 4, KV, HD)).astype(np.float32)
+    v = rng.standard_normal((1, 4, KV, HD)).astype(np.float32)
+    out = pc.ingest_prefill_chunk(cache, jnp.asarray(k), jnp.asarray(v),
+                                  jnp.asarray([4], jnp.int32))
+    np.testing.assert_array_equal(np.asarray(out.k_pages[0, :, 0]),
+                                  shared_k)
+    assert int(out.cur_len[0]) == 0                  # write was dropped
+
+
+# ---------------------------------------------------------------------------
+# the pool property: shared slots are bit-frozen
+# ---------------------------------------------------------------------------
+def _shared_snapshot(cache):
+    """{(lane, slot): (k, v, pos, len)} for every refcount > 1 slot."""
+    rc = np.asarray(cache.refcount)
+    out = {}
+    for b, s in zip(*np.nonzero(rc > 1)):
+        out[(b, s)] = (np.asarray(cache.k_pages[b, :, s]),
+                       np.asarray(cache.v_pages[b, :, s]),
+                       int(cache.page_pos[b, s]),
+                       int(cache.page_len[b, s]))
+    return out
+
+
+def _check_shared_frozen(before, cache, ctx):
+    after = _shared_snapshot(cache)
+    for key, (k0, v0, pos0, len0) in before.items():
+        if key not in after:
+            continue                  # claims legitimately dropped
+        k1, v1, pos1, len1 = after[key]
+        np.testing.assert_array_equal(k1, k0, err_msg=f"{ctx} K {key}")
+        np.testing.assert_array_equal(v1, v0, err_msg=f"{ctx} V {key}")
+        assert (pos1, len1) == (pos0, len0), f"{ctx} meta {key}"
+
+
+def _pool_walk(seed):
+    """Protocol-legal random walk over a 2-lane cache.
+
+    Per lane: run (appends; sometimes an INCREF pins the active page,
+    so later appends exercise COW) -> park (INCREF full pages, then
+    RELEASE) -> resume (MOUNT a page-aligned prefix) or recycle (drop
+    claims host-side, RESET).  After every step, every slot that was
+    and still is shared must be bit-identical.
+    """
+    rng = np.random.default_rng(seed)
+    cache = _prefilled(rng, B=2, length=int(rng.integers(1, 3)) * P)
+    running = [True, True]
+    parked_pages = [0, 0]
+    for step in range(40):
+        lane = int(rng.integers(0, 2))
+        before = _shared_snapshot(cache)
+        roll = rng.random()
+        if running[lane]:
+            if roll < 0.55:
+                cache, ev = _append(cache, rng, lanes=[lane])
+                for (b, s) in before:
+                    assert not (b == lane and s == int(ev[lane])), \
+                        f"seed {seed} step {step}: evicted shared slot"
+            elif roll < 0.7 and int(cache.active_slot[lane]) >= 0 \
+                    and int(cache.refcount[
+                        lane, int(cache.active_slot[lane])]) < 3:
+                a = int(cache.active_slot[lane])
+                cache = _lane_op(cache, lane, pool.OP_INCREF, a, a + 1)
+            else:
+                full = int(cache.cur_len[lane]) // P
+                if full:
+                    cache = _lane_op(cache, lane, pool.OP_INCREF, 0,
+                                     full)
+                cache = _lane_op(cache, lane, pool.OP_RELEASE)
+                running[lane] = False
+                parked_pages[lane] = full
+        else:
+            if roll < 0.5 and parked_pages[lane]:
+                keep = int(rng.integers(1, parked_pages[lane] + 1))
+                cache = _lane_op(cache, lane, pool.OP_MOUNT, keep * P)
+                running[lane] = True
+                parked_pages[lane] = keep
+            else:
+                # recycling drops the host-side claims first, exactly
+                # like Engine._drop_parked + OP_RESET
+                cache = _lane_op(cache, lane, pool.OP_RESET)
+                running[lane] = True
+                parked_pages[lane] = 0
+        _check_shared_frozen(before, cache,
+                             f"seed {seed} step {step}")
+        rc = np.asarray(cache.refcount)
+        assert (rc >= 0).all(), rc
+        # free slots never carry claims; claimed slots are never free
+        free = np.asarray(cache.page_pos) < 0
+        assert (rc[free] == 0).all(), (rc, free)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(min_value=0, max_value=2 ** 16))
+def test_pool_shared_slots_frozen_property(seed):
+    _pool_walk(seed)
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_pool_shared_slots_frozen_deterministic(seed):
+    _pool_walk(seed)
+
+
+# ---------------------------------------------------------------------------
+# prefix index + session ids (host half)
+# ---------------------------------------------------------------------------
+def test_prefix_index_register_lookup():
+    idx = pool.PrefixIndex(P)
+    toks = np.arange(12, dtype=np.int32)
+    assert idx.register(0, toks) == 3
+    assert idx.covered_pages(0) == 3
+    assert idx.lookup(np.concatenate([toks, [99]])) == (0, 3)
+    assert idx.lookup(toks[:8]) == (0, 2)
+    assert idx.lookup(toks[:7]) == (0, 1)            # one full page
+    assert idx.lookup(toks[:3]) is None              # below a page
+    other = toks.copy()
+    other[0] = 77
+    assert idx.lookup(other) is None
+    # content is canonical: a second lane registering the same prefix
+    # gains no cover (one copy of the bytes is enough)
+    assert idx.register(1, toks) == 0
+    assert idx.covered_pages(1) == 0
+
+
+def test_prefix_index_truncate_and_drop():
+    idx = pool.PrefixIndex(P)
+    toks = np.arange(12, dtype=np.int32)
+    idx.register(0, toks)
+    idx.truncate(0, 1)
+    assert idx.covered_pages(0) == 1
+    assert idx.lookup(toks) == (0, 1)
+    idx.drop_lane(0)
+    assert idx.covered_pages(0) == 0
+    assert idx.lookup(toks) is None
+    # dropped digests are claimable again
+    assert idx.register(1, toks) == 3
+    assert idx.lookup(toks) == (1, 3)
+
+
+def test_session_id_contract():
+    sid = pool.generate_session_id()
+    assert pool.validate_session_id(sid) == sid
+    for bad in ("", "xyz", "A" * 32, "g" * 32, 123, None,
+                pool.generate_session_id() + "0"):
+        with pytest.raises(ValueError):
+            pool.validate_session_id(bad)

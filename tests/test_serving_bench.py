@@ -37,7 +37,17 @@ def test_serving_throughput_smoke():
     assert don["peak_live_bytes"] + don["kv_cache_bytes"] \
         <= don["peak_live_bytes_undonated"]
     assert set(don["per_dispatch"]) \
-        == {"reset", "prefill_chunk", "decode_chunk"}
+        == {"reset", "prefill_chunk", "decode_chunk", "pool_transition"}
+    # shared-prefix row: the byte-parity assertion runs inside run();
+    # here pin the schema and the collapse accounting it exposes
+    assert result["schema"] == "serving/v5-prefix-cache"
+    sp = result["prefix_cache"]
+    assert sp["prefix_caching"] is True
+    assert sp["prefix_mounts"] + sp["prefix_clones"] >= 1
+    assert sp["prefix_cached_tokens"] > 0
+    assert sp["prefill_tokens"] \
+        == sp["prefill_tokens_uncached"] - sp["prefix_cached_tokens"]
+    assert 0 < sp["prefill_collapse"] < 1
 
 
 @pytest.mark.slow
