@@ -39,6 +39,16 @@ its ``prefill_tokens`` collapse by exactly ``prefix_cached_tokens``
 (only the unshared suffixes, plus the first fleet member's full
 prompt, ever run through ``prefill_chunk``).
 
+A **preemption row** (schema ``serving/v6-preemption``) pins every
+lane with a long decode while short requests queue, forcing the
+scheduler's graceful-degradation path (``preempt_after=1``): long
+decodes are checkpointed to host, their lanes recycled for the queue,
+and restored when pressure clears.  The row asserts the preempted
+fleet's outputs are byte-identical to the uninterrupted run, that
+checkpoints/restores really fired, and reports warm
+``checkpoint_lane`` / ``restore_lane`` wall-clock (the cost of one
+lane's device->host round trip).
+
 ``--mesh data=N`` adds a **sharded row**: the same workload through a
 lane-sharded engine under an N-device mesh (forced host devices on
 CPU).  The row asserts the sharded engine's outputs are byte-identical
@@ -126,6 +136,22 @@ def _workload_shared_prefix(n_requests: int, rng,
                                   size=suffix_len).astype(np.int32)]),
         max_new_tokens=8)
         for i in range(n_requests)]
+
+
+def _workload_preempt(rng) -> List[Request]:
+    """Every lane pinned by a long decode while short requests queue:
+    guaranteed admission starvation, so ``preempt_after=1`` must drive
+    the checkpoint/restore degradation path."""
+    longs = [Request(
+        uid=i, prompt=rng.integers(0, BENCH_MODEL.vocab_size,
+                                   size=16).astype(np.int32),
+        max_new_tokens=48) for i in range(BATCH_SLOTS)]
+    shorts = [Request(
+        uid=BATCH_SLOTS + i,
+        prompt=rng.integers(0, BENCH_MODEL.vocab_size,
+                            size=16).astype(np.int32),
+        max_new_tokens=8) for i in range(2)]
+    return longs + shorts
 
 
 def _engine(params, max_seq: int, mesh=None,
@@ -218,6 +244,68 @@ def _donation_audit(params, max_seq) -> Dict:
     }
 
 
+def _run_preemption(params, max_seq) -> Dict:
+    """The graceful-degradation row: serve the starvation workload
+    with ``preempt_after=1`` and assert byte parity against the same
+    fleet served without preemption, then microbench one warm
+    checkpoint/restore cycle."""
+    import copy
+    reqs = _workload_preempt(np.random.default_rng(3))
+    base_eng = _engine(params, max_seq)
+    base = serve(base_eng, copy.deepcopy(reqs))
+
+    eng = _engine(params, max_seq)
+    t0 = time.perf_counter()
+    done = serve(eng, copy.deepcopy(reqs), preempt_after=1)
+    wall = time.perf_counter() - t0
+    assert eng.checkpoints >= 1 and eng.restores >= 1, \
+        (eng.checkpoints, eng.restores)
+    n_ck, n_rs = eng.checkpoints, eng.restores   # serve-phase counts
+    outs = {r.uid: list(r.output) for r in done}
+    assert outs == {r.uid: list(r.output) for r in base}, \
+        "preemption changed output bytes"
+    statuses = {}
+    for r in done:
+        statuses[r.status] = statuses.get(r.status, 0) + 1
+    assert set(statuses) <= {"OK", "PREEMPTED_RESUMED"}, statuses
+    tokens = eng.tokens_emitted          # before the microbench request
+
+    # microbench: warm per-lane checkpoint + restore (second cycle —
+    # the first compiles the snapshot/restore dispatches)
+    mb = Request(uid=9_999,
+                 prompt=np.random.default_rng(4).integers(
+                     0, BENCH_MODEL.vocab_size, size=16).astype(np.int32),
+                 max_new_tokens=64)
+    eng.admit(mb)
+    eng.drain_prefill()
+    eng.step_chunk()
+    slot = eng.slot_req.index(mb)
+    ck_s = rs_s = 0.0
+    for _ in range(2):
+        t1 = time.perf_counter()
+        ck = eng.checkpoint_lane(slot)
+        ck_s = time.perf_counter() - t1
+        t1 = time.perf_counter()
+        slot = eng.restore_lane(ck)
+        jax.block_until_ready(jax.tree.leaves(eng.cache))
+        rs_s = time.perf_counter() - t1
+    while eng.has_active():
+        eng.step_chunk()
+    eng.audit_refcounts()
+    return {
+        "wall_s": wall,
+        "tokens_emitted": tokens,
+        "checkpoints": n_ck,
+        "restores": n_rs,
+        "statuses": statuses,
+        "checkpoint_s": ck_s,
+        "restore_s": rs_s,
+        "workload": [{"uid": r.uid, "prompt_len": int(len(r.prompt)),
+                      "max_new_tokens": r.max_new_tokens} for r in reqs],
+        "outputs": outs,
+    }
+
+
 def _run_sequential(params, reqs, max_seq) -> Dict:
     """One request at a time: admit -> full prefill -> decode to
     completion.  Same engine geometry, one lane ever busy."""
@@ -297,6 +385,10 @@ def run(n_requests: int = 15, write_json: bool = True,
     sp["prefill_collapse"] = \
         1 - sp["prefill_tokens"] / sp_base["prefill_tokens"]
 
+    # preemption row: graceful degradation under page-pool pressure,
+    # byte parity asserted inside against the uninterrupted fleet
+    pre = _run_preemption(params, max_seq)
+
     don = _donation_audit(params, max_seq)
 
     shard = None
@@ -338,6 +430,11 @@ def run(n_requests: int = 15, write_json: bool = True,
 
     rows = [("continuous", cont), ("sequential", seq),
             ("prefill_heavy", ph), ("prefix_cache", sp)]
+    print(f"serving/preemption,"
+          f"checkpoints={pre['checkpoints']},restores={pre['restores']},"
+          f"checkpoint_us={pre['checkpoint_s']*1e6:.0f},"
+          f"restore_us={pre['restore_s']*1e6:.0f},"
+          f"statuses={pre['statuses']}", flush=True)
     if shard is not None:
         rows.append((f"sharded[{shard['mesh']}]", shard))
     if shard_sp is not None:
@@ -378,7 +475,7 @@ def run(n_requests: int = 15, write_json: bool = True,
           flush=True)
 
     result = {
-        "schema": "serving/v5-prefix-cache",
+        "schema": "serving/v6-preemption",
         "model": BENCH_MODEL.name,
         "batch_slots": BATCH_SLOTS,
         "max_prefill": MAX_PREFILL,
@@ -392,6 +489,7 @@ def run(n_requests: int = 15, write_json: bool = True,
         "sequential": {k: v for k, v in seq.items() if k != "outputs"},
         "prefill_heavy": {k: v for k, v in ph.items() if k != "outputs"},
         "prefix_cache": {k: v for k, v in sp.items() if k != "outputs"},
+        "preemption": {k: v for k, v in pre.items() if k != "outputs"},
         "donation": don,
         "throughput_speedup": speedup,
     }
@@ -422,7 +520,8 @@ def run(n_requests: int = 15, write_json: bool = True,
         if shard is not None:
             if prev is not None:
                 for k in ("continuous", "sequential", "prefill_heavy",
-                          "prefix_cache", "throughput_speedup"):
+                          "prefix_cache", "preemption",
+                          "throughput_speedup"):
                     result[k] = prev[k]
                 print("serving: kept single-device baseline rows from "
                       f"existing {OUT_PATH.name}", flush=True)

@@ -2,7 +2,8 @@
 dispatches with the :mod:`repro.analysis.hlo` passes.
 
 The engine's chunked dispatch functions (``reset``, ``prefill_chunk``,
-``decode_chunk``, and the page pool's ``pool_transition``) are lowered
+``decode_chunk``, the page pool's ``pool_transition``, and the
+preemption path's ``lane_restore``) are lowered
 ahead-of-time with ``ShapeDtypeStruct`` stand-ins (no device
 allocation beyond what the engine already holds) and compiled; each
 optimized program then runs through the KV-copy, host-transfer,
@@ -30,7 +31,7 @@ from repro.analysis import hlo
 from repro.analysis.findings import Finding
 
 DISPATCHES = ("reset", "prefill_chunk", "decode_chunk",
-              "pool_transition")
+              "pool_transition", "lane_restore")
 
 
 def _sds(x) -> jax.ShapeDtypeStruct:
@@ -63,6 +64,14 @@ def dispatch_lowerings(eng) -> Dict[str, "jax.stages.Lowered"]:
             lane_i32, lane_i32, steps=eng.chunk_steps),
         "pool_transition": eng._transition_fn.lower(
             cache_s, lane_i32, lane_i32, lane_i32),
+        # preemption restore: one lane's host checkpoint scattered back
+        # into the donated cache.  The snapshot half is deliberately not
+        # audited — it returns fresh single-lane rows (device->host by
+        # design, and donating the cache it reads would be a bug).
+        "lane_restore": eng._restore_fn.lower(
+            cache_s, jax.ShapeDtypeStruct((), jnp.int32),
+            jax.eval_shape(eng._snapshot_fn, cache_s,
+                           jax.ShapeDtypeStruct((), jnp.int32))),
     }
 
 

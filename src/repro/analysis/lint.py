@@ -36,6 +36,19 @@ Rules (stable ids — suppressions and CI reference them):
     *transitions* (mount / incref / release / reset) — a raw count
     write outside the pool would silently break the no-eviction
     guarantee on shared slots that the property tests pin down.
+``no-bare-except-in-serving``
+    Inside ``serving/``: no bare ``except:`` and no except handler
+    whose body is a single ``pass``.  The resilience layer's contract
+    is that every failure reaches a terminal request status or
+    propagates to the scheduler's drain path — a silent swallow in
+    serving code is exactly how a dispatch error turns into a leaked
+    lane.  Handlers must name the exception type and *do* something.
+``no-unbounded-retry``
+    Inside ``serving/``: no ``while True:`` (or ``while 1:``) loop
+    containing a ``try`` statement.  Retry-on-error must be bounded
+    (``for attempt in range(retry_limit)`` — see
+    ``Engine._dispatch``); an unbounded retry loop around a dispatch
+    converts a permanent fault into a livelock.
 
 Suppression syntax — on the offending line, or a standalone comment on
 the line directly above::
@@ -62,6 +75,8 @@ RULES = (
     "paged-gather-outside-kernels",
     "policy-imports",
     "pool-refcount-outside-pool",
+    "no-bare-except-in-serving",
+    "no-unbounded-retry",
 )
 
 # the only modules allowed to touch PagedCache.refcount directly
@@ -171,6 +186,11 @@ class _FileLint:
             if isinstance(child, ast.Subscript) \
                     and isinstance(child.ctx, ast.Load):
                 self._check_subscript(child)
+            if self.in_serving:
+                if isinstance(child, ast.ExceptHandler):
+                    self._check_except(child)
+                elif isinstance(child, ast.While):
+                    self._check_retry_loop(child)
             self._walk(child, d)
 
     # -- rules -------------------------------------------------------------
@@ -229,6 +249,32 @@ class _FileLint:
                        f"`{dotted or _terminal_name(call.func)}` of a jnp "
                        "value inside a loop — one host sync per "
                        "iteration; batch the transfer outside the loop")
+
+    def _check_except(self, handler: ast.ExceptHandler) -> None:
+        if handler.type is None:
+            self._emit("no-bare-except-in-serving", handler,
+                       "bare `except:` in serving code — name the "
+                       "exception; failures must reach a terminal "
+                       "request status, never vanish")
+            return
+        if len(handler.body) == 1 \
+                and isinstance(handler.body[0], ast.Pass):
+            self._emit("no-bare-except-in-serving", handler,
+                       "except handler silently swallows (`pass` "
+                       "body) in serving code — handle the failure "
+                       "or let the scheduler's drain path see it")
+
+    def _check_retry_loop(self, loop: ast.While) -> None:
+        test = loop.test
+        endless = (isinstance(test, ast.Constant)
+                   and (test.value is True or test.value == 1))
+        if endless and any(isinstance(n, ast.Try)
+                           for n in ast.walk(loop)):
+            self._emit("no-unbounded-retry", loop,
+                       "`while True:` around a try in serving code — "
+                       "retry must be bounded (for attempt in "
+                       "range(retry_limit)), or a permanent fault "
+                       "becomes a livelock")
 
     def _check_subscript(self, sub: ast.Subscript) -> None:
         v = sub.value

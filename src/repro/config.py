@@ -301,6 +301,18 @@ class ServeConfig:
     # chunked prefill (the engine gates it); purely host+metadata —
     # kernels are unchanged either way.
     prefix_caching: bool = True
+    # resilience (repro.serving.resilience): transient dispatch
+    # failures are retried up to retry_limit attempts with exponential
+    # backoff (retry_backoff_s doubling per attempt; 0 = no sleep),
+    # then surface as DispatchFailedError and the scheduler drains.
+    retry_limit: int = 3
+    retry_backoff_s: float = 0.0
+    # graceful degradation: after this many consecutive chunk
+    # boundaries with the queue starved (no free lane, nothing
+    # admitted), the scheduler checkpoints the youngest long decode to
+    # host and recycles its lane; 0 disables preemption.  Overridable
+    # per serve() call.
+    preempt_after: int = 0
 
     def __post_init__(self) -> None:
         if self.max_prefill > self.max_seq:
@@ -311,6 +323,12 @@ class ServeConfig:
             raise ValueError("chunk_steps must be positive")
         if self.batch_slots < 1:
             raise ValueError("batch_slots must be positive")
+        if self.retry_limit < 1:
+            raise ValueError("retry_limit must be positive")
+        if self.retry_backoff_s < 0:
+            raise ValueError("retry_backoff_s must be >= 0")
+        if self.preempt_after < 0:
+            raise ValueError("preempt_after must be >= 0")
         if self.mesh:
             # lazy import (jax lives downstream); the parse is pure
             # string validation — no device is touched at config time.

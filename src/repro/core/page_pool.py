@@ -11,7 +11,11 @@ owns that accounting, in two halves:
 transition per dispatch (op codes below) and :func:`clone_prefix`
 copies one lane's leading prefix pages into another lane (the only KV
 byte traffic in the pool, used when a busy donor's prefix is wanted on
-a second lane).  Both are pure jittable functions over a single
+a second lane).  :func:`restore_lane` writes a checkpointed lane's
+rows (from :func:`~repro.core.paged_cache.snapshot_lane`) onto any
+free lane, re-stamping the refcount to the restoring request's single
+claim — the device half of lane preemption (serving/resilience.py).
+All are pure jittable functions over a single
 ``PagedCache`` whose leaves may be period-stacked (``[n_periods, B,
 ...]``) — every mask broadcasts right-aligned, exactly like
 :func:`~repro.core.paged_cache.reset_lanes`.
@@ -56,7 +60,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.paged_cache import INF, PagedCache
+from repro.core.paged_cache import AFTER_LANE, INF, PagedCache, lane_axis
 
 # lane transition op codes (device-side; one per lane per dispatch)
 OP_NOP = 0
@@ -142,11 +146,9 @@ def transition_lanes(cache: PagedCache, op: jnp.ndarray, a0: jnp.ndarray,
     )
 
 
-# per-field rank *after* the lane axis: leaves may carry leading
-# stacked axes, so the lane axis of field f is ``ndim - 1 - after``.
-_AFTER_LANE = dict(k_pages=4, v_pages=4, rep_min=3, rep_max=3,
-                   priority=1, page_pos=1, page_len=1, pinned=1,
-                   refcount=1, active_slot=0, cur_len=0)
+# lane-axis layout lives with the cache (paged_cache.AFTER_LANE);
+# kept under the old name for the take/put helpers below.
+_AFTER_LANE = AFTER_LANE
 
 
 def clone_prefix(cache: PagedCache, src: jnp.ndarray, dst: jnp.ndarray,
@@ -210,6 +212,34 @@ def clone_prefix(cache: PagedCache, src: jnp.ndarray, dst: jnp.ndarray,
                                      jnp.shape(take("cur_len")))),
     )
     return new
+
+
+def restore_lane(cache: PagedCache, lane: jnp.ndarray,
+                 snap: PagedCache) -> PagedCache:
+    """Write a checkpointed lane (``snap``: per-lane rows from
+    :func:`~repro.core.paged_cache.snapshot_lane`, possibly round-
+    tripped through host memory) into lane ``lane`` of ``cache``.
+
+    Every leaf row is overwritten, so the target lane may hold
+    anything (the engine drops parked claims on it first).  The
+    restored ``refcount`` is re-stamped to exactly one claim — the
+    restoring request's — on every live slot: the snapshot's counts
+    included index claims of the *source* lane, which stayed behind
+    (parked) when the checkpoint released it.  Byte parity of decode
+    is unaffected: refcounts only gate eviction/overwrite protection,
+    and every slot whose count could exceed one is a pinned prefill /
+    mounted page that is protected regardless.
+    """
+    rows = snap._replace(
+        refcount=(snap.page_len > 0).astype(jnp.int32))
+
+    def put(name: str) -> jnp.ndarray:
+        x = getattr(cache, name)
+        row = jnp.asarray(getattr(rows, name)).astype(x.dtype)
+        return jax.lax.dynamic_update_index_in_dim(
+            x, row, lane, axis=lane_axis(x, name))
+
+    return PagedCache(**{f: put(f) for f in PagedCache._fields})
 
 
 # ---------------------------------------------------------------------------

@@ -256,6 +256,62 @@ def reset_lanes(cache: PagedCache, mask: jnp.ndarray) -> PagedCache:
     )
 
 
+def scrub_lanes(cache: PagedCache, mask: jnp.ndarray) -> PagedCache:
+    """Return ``cache`` with the masked lanes' K/V page *payload*
+    zeroed and their representative keys re-initialized.
+
+    :func:`reset_lanes` is deliberately metadata-only: stale bytes are
+    dead under the prefix contract.  That contract assumes the stale
+    bytes are *finite* — masked arithmetic (``0 * NaN == NaN``) lets
+    non-finite garbage poison reductions that merely range over a dead
+    slot.  A lane quarantined for non-finite logits may hold exactly
+    such bytes, so the engine scrubs its payload before the lane can
+    be recycled.  Handles period-stacked leaves like every lane op
+    (the lane axis is located per field via :data:`AFTER_LANE`).
+    """
+    def m(name: str) -> jnp.ndarray:
+        return mask.reshape((-1,) + (1,) * AFTER_LANE[name])
+    return cache._replace(
+        k_pages=jnp.where(m("k_pages"), 0, cache.k_pages),
+        v_pages=jnp.where(m("v_pages"), 0, cache.v_pages),
+        rep_min=jnp.where(m("rep_min"), INF, cache.rep_min),
+        rep_max=jnp.where(m("rep_max"), -INF, cache.rep_max),
+    )
+
+
+# Per-field rank *after* the lane axis: cache leaves may carry leading
+# stacked axes (the engine stacks layers as [n_periods, B, ...]), so
+# the lane axis of field ``f`` is ``x.ndim - 1 - AFTER_LANE[f]``.
+# Single source for every whole-lane slice (clone / snapshot / restore).
+AFTER_LANE = dict(k_pages=4, v_pages=4, rep_min=3, rep_max=3,
+                  priority=1, page_pos=1, page_len=1, pinned=1,
+                  refcount=1, active_slot=0, cur_len=0)
+
+
+def lane_axis(x: jnp.ndarray, name: str) -> int:
+    """Index of the lane axis in cache leaf ``name`` (stacking-proof)."""
+    return x.ndim - 1 - AFTER_LANE[name]
+
+
+def snapshot_lane(cache: PagedCache, lane: jnp.ndarray) -> PagedCache:
+    """One lane's complete cache state, lane axis removed from every
+    leaf — the device half of lane checkpointing.
+
+    The returned ``PagedCache`` container holds per-lane *rows* (one
+    rank lower than the batched cache), ready for a single
+    device->host transfer.  Pages, representative keys and all slot
+    metadata ride along, so a later :func:`page_pool.restore_lane`
+    onto any free lane reproduces the lane byte-identically — the lane
+    axis is elementwise everywhere, so lane identity carries no state.
+    """
+    def take(name: str) -> jnp.ndarray:
+        x = getattr(cache, name)
+        return jax.lax.dynamic_index_in_dim(x, lane,
+                                            axis=lane_axis(x, name),
+                                            keepdims=False)
+    return PagedCache(**{f: take(f) for f in PagedCache._fields})
+
+
 def ingest_prefill_chunk(cache: PagedCache, k: jnp.ndarray, v: jnp.ndarray,
                          chunk_lens: jnp.ndarray,
                          pin: bool = True) -> PagedCache:

@@ -343,6 +343,10 @@ class ChunkResult(NamedTuple):
 
     tokens: jnp.ndarray     # [K, B] i32
     emitted: jnp.ndarray    # [K, B] bool
+    ok: jnp.ndarray         # [K, B] bool — the step's logits were all
+                            # finite (a free on-device NaN/Inf guard;
+                            # the engine quarantines a lane whose
+                            # emitted step reads False)
     token: jnp.ndarray      # [B] i32 — feed token for the next chunk
     pos: jnp.ndarray        # [B] i32
     active: jnp.ndarray     # [B] bool
@@ -360,8 +364,8 @@ def chunk_result_sharding(lane, step_lane) -> "ChunkResult":
     device instead of being re-laid-out by the partitioner.
     """
     return ChunkResult(
-        tokens=step_lane, emitted=step_lane, token=lane, pos=lane,
-        active=lane, n_emitted=lane,
+        tokens=step_lane, emitted=step_lane, ok=step_lane, token=lane,
+        pos=lane, active=lane, n_emitted=lane,
         stats=StepStats(evictions=step_lane, pages_attended=step_lane,
                         tokens_cached=step_lane))
 
@@ -410,6 +414,11 @@ def decode_chunk(params: dict, cfg: ModelConfig, cache: ModelCache,
                                             cache, raas, policy, impl=impl,
                                             write_mask=active)
         nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)     # [B]
+        # free NaN/Inf guard: a poisoned lane's logits go non-finite
+        # (argmax of all-NaN is garbage); surfacing the mask as a chunk
+        # output lets the engine quarantine that lane at the boundary
+        # without a single extra host transfer.
+        ok = jnp.all(jnp.isfinite(logits), axis=-1)             # [B]
         emitted = active
         inc = emitted.astype(jnp.int32)
         pos = pos + inc
@@ -419,12 +428,12 @@ def decode_chunk(params: dict, cfg: ModelConfig, cache: ModelCache,
                           | (pos >= max_seq - 1))
         token = jnp.where(emitted, nxt, token)
         return (cache, token, pos, active & ~done, n_emitted), \
-            (nxt, emitted, stats)
+            (nxt, emitted, ok, stats)
 
     init = (cache, token.astype(jnp.int32), pos.astype(jnp.int32),
             active, n_emitted.astype(jnp.int32))
-    (cache, token, pos, active, n_emitted), (toks, emitted, stats) = \
+    (cache, token, pos, active, n_emitted), (toks, emitted, oks, stats) = \
         jax.lax.scan(one, init, None, length=steps)
-    return cache, ChunkResult(tokens=toks, emitted=emitted, token=token,
-                              pos=pos, active=active, n_emitted=n_emitted,
-                              stats=stats)
+    return cache, ChunkResult(tokens=toks, emitted=emitted, ok=oks,
+                              token=token, pos=pos, active=active,
+                              n_emitted=n_emitted, stats=stats)

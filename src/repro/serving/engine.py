@@ -50,6 +50,15 @@ Design:
     :meth:`kv_cache_bytes_per_device`.  Outputs are byte-identical to
     the single-device engine (lane math is elementwise along the lane
     axis; with model=1 no reduction is reassociated).
+  * **Resilience** (:mod:`repro.serving.resilience`): every request
+    ends in a terminal status; transient dispatch failures retry with
+    bounded backoff; a decode chunk whose logits go non-finite
+    quarantines only the poisoned lane (the on-device ``ok`` mask
+    rides the chunk output — no extra transfer); and a decoding lane
+    can be checkpointed to host (:meth:`Engine.checkpoint_lane` — one
+    snapshot dispatch, one transfer) and restored byte-identically
+    onto ANY free lane (:meth:`Engine.restore_lane`), which is what
+    the scheduler's graceful degradation and crash recovery stand on.
   * All policy semantics dispatch through the resolved
     :class:`SparsityPolicy` object; the engine knows no policy names.
 
@@ -64,6 +73,7 @@ function (the trace-count test asserts chunks hit the jit cache).
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import List, Optional
 
 import jax
@@ -76,6 +86,7 @@ from repro.core import paged_cache as pc
 from repro.core.policy_base import get_policy
 from repro.kernels import ops
 from repro.models import model as M
+from repro.serving import resilience as R
 
 FREE, PREFILL, DECODE = 0, 1, 2
 
@@ -108,6 +119,14 @@ class Request:
     # filled by the engine
     output: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    # terminal status (repro.serving.resilience): None while in
+    # flight, then exactly one of OK / REJECTED / FAILED_NAN /
+    # FAILED_DISPATCH / PREEMPTED_RESUMED.
+    status: Optional[str] = None
+    # the request was checkpointed to host (preemption) or replayed
+    # after a lane loss at least once; a clean finish then reports
+    # PREEMPTED_RESUMED instead of OK.
+    preempted: bool = False
 
 
 class Engine:
@@ -119,7 +138,7 @@ class Engine:
                  param_dtype=jnp.float32,
                  chunk_steps: Optional[int] = None,
                  prefill_chunk: Optional[int] = None,
-                 mesh=None):
+                 mesh=None, faults: Optional[R.FaultPlan] = None):
         geometry = (batch_slots, max_seq, max_prefill, chunk_steps,
                     prefill_chunk)
         if serve is None:
@@ -188,6 +207,11 @@ class Engine:
         self.mesh = mesh
         self._lane_shd = self._lane2_shd = self._step_shd = None
         cache_shd = None
+        def _fresh_cache():
+            return M.init_model_cache(cfg, raas, B, self.max_seq,
+                                      prefill_len=self.max_prefill,
+                                      dtype=param_dtype)
+
         if mesh is not None:
             from repro.launch import shardings as S
             if not {"data", "model"} <= set(mesh.axis_names):
@@ -217,20 +241,13 @@ class Engine:
             # the cache is *born sharded*: jit its init with explicit
             # out_shardings so no device ever materializes the full
             # [B, KV, S, P, hd] page array.
-            cache_like = jax.eval_shape(
-                lambda: M.init_model_cache(cfg, raas, B, self.max_seq,
-                                           prefill_len=self.max_prefill,
-                                           dtype=param_dtype))
+            cache_like = jax.eval_shape(_fresh_cache)
             cache_shd = S.engine_state_shardings(cache_like, B, mesh)
-            self.cache = jax.jit(
-                lambda: M.init_model_cache(cfg, raas, B, self.max_seq,
-                                           prefill_len=self.max_prefill,
-                                           dtype=param_dtype),
-                out_shardings=cache_shd)()
+            self._cache_init = jax.jit(_fresh_cache,
+                                       out_shardings=cache_shd)
         else:
-            self.cache = M.init_model_cache(cfg, raas, B, self.max_seq,
-                                            prefill_len=self.max_prefill,
-                                            dtype=param_dtype)
+            self._cache_init = _fresh_cache
+        self.cache = self._cache_init()
         self._cache_shd = cache_shd
         self.pos = np.zeros(B, np.int32)
         self.phase = np.zeros(B, np.int32)          # FREE/PREFILL/DECODE
@@ -255,6 +272,18 @@ class Engine:
         self.n_emitted = np.zeros(B, np.int32)
         self.eos_id = np.full(B, -1, np.int32)
         self.max_new = np.zeros(B, np.int32)
+        # admission age per lane (monotone counter): the degradation
+        # policy preempts the *youngest* long decode, wasting the least
+        # progress of lanes closest to finishing.
+        self.lane_seq = np.zeros(B, np.int64)
+        self._admit_seq = 0
+        # resilience: bounded retry for transient dispatch failures and
+        # the (optional) deterministic fault-injection plan.  All
+        # injection is host-side at dispatch boundaries — the compiled
+        # HLO is identical with or without a plan (audited).
+        self.retry_limit = serve.retry_limit
+        self.retry_backoff_s = serve.retry_backoff_s
+        self._faults = faults
         self.steps_executed = 0     # decode scan steps with >=1 live lane
         self.tokens_emitted = 0     # true emitted tokens (incl. prefill's)
         self.prefill_tokens = 0     # prompt tokens ingested
@@ -270,6 +299,15 @@ class Engine:
         self.prefix_clones = 0      # busy-donor page copies
         self.session_hits = 0       # mounts that resumed a session
         self.pool_dispatches = 0    # transition + clone dispatches
+        # resilience accounting
+        self.checkpoints = 0        # lanes snapshotted to host
+        self.restores = 0           # checkpoints restored onto a lane
+        self.retries = 0            # dispatch attempts retried
+        self.nan_quarantines = 0    # lanes quarantined on non-finite logits
+        self.lane_losses = 0        # simulated lane losses replayed
+        self.tokens_discarded = 0   # emitted tokens dropped by faults
+                                    # (tokens_emitted - tokens_discarded
+                                    # == sum of surviving outputs)
         # analytic prefill attention traffic (ops.flash_prefill_cost,
         # exact from the kernel grid x the per-dispatch chunk-resume
         # table, summed over attention layers): the paged in-place
@@ -307,6 +345,16 @@ class Engine:
                             jnp.zeros_like(x), x), bc.mamba))
                 for bc in cache.per_pos))
 
+        def _scrub(cache, mask):
+            # quarantine companion to _reset: zero the masked lanes'
+            # page payload.  reset_lanes is metadata-only — sound for
+            # finite stale bytes, not for the NaN/Inf ones a poisoned
+            # lane holds (see paged_cache.scrub_lanes).
+            return M.ModelCache(per_pos=tuple(
+                bc._replace(attn=None if bc.attn is None
+                            else pc.scrub_lanes(bc.attn, mask))
+                for bc in cache.per_pos))
+
         def _transition(cache, op, a0, a1):
             # metadata-only pool transitions, batched over lanes;
             # mamba is None on the (all-attn) prefix-caching path.
@@ -320,6 +368,21 @@ class Engine:
                 bc._replace(attn=None if bc.attn is None
                             else pool.clone_prefix(bc.attn, src, dst, keep))
                 for bc in cache.per_pos))
+
+        def _snapshot(cache, lane):
+            # one lane's rows across every attention block — a single
+            # dispatch whose output is the whole device->host transfer
+            # of a checkpoint.  The cache is NOT donated: the engine
+            # keeps serving the other lanes from it.
+            return tuple(None if bc.attn is None
+                         else pc.snapshot_lane(bc.attn, lane)
+                         for bc in cache.per_pos)
+
+        def _restore(cache, lane, rows):
+            return M.ModelCache(per_pos=tuple(
+                bc._replace(attn=None if bc.attn is None
+                            else pool.restore_lane(bc.attn, lane, row))
+                for bc, row in zip(cache.per_pos, rows)))
 
         def _prefill_chunk(params, cache, tokens, chunk_lens, start,
                            ctx_pages):
@@ -349,10 +412,22 @@ class Engine:
         # (repro.analysis's donation audit enforces this stays true)
         self._reset_fn = jax.jit(_reset, donate_argnums=(0,),
                                  **_out(cache_shd))
+        self._scrub_fn = jax.jit(_scrub, donate_argnums=(0,),
+                                 **_out(cache_shd))
         self._transition_fn = jax.jit(_transition, donate_argnums=(0,),
                                       **_out(cache_shd))
         self._clone_fn = jax.jit(_clone, donate_argnums=(0,),
                                  **_out(cache_shd))
+        # checkpoint/restore ride the chunked attention path (a lane's
+        # state is fully captured by its PagedCache rows there; SSM
+        # state has no page identity to snapshot).  Restore donates
+        # the cache like every other lane transition; snapshot must
+        # not — its input cache keeps serving.
+        self._snapshot_fn = self._restore_fn = None
+        if self.chunked_prefill and cfg.has_attention:
+            self._snapshot_fn = jax.jit(_snapshot)
+            self._restore_fn = jax.jit(_restore, donate_argnums=(0,),
+                                       **_out(cache_shd))
         self._prefill_chunk_fn = jax.jit(
             _prefill_chunk, static_argnames=("ctx_pages",),
             donate_argnums=(1,),
@@ -391,6 +466,44 @@ class Engine:
         return jax.device_put(
             arr, self._lane_shd if arr.ndim == 1 else self._lane2_shd)
 
+    # -- resilience ----------------------------------------------------------
+    def set_faults(self, plan: Optional[R.FaultPlan]) -> None:
+        """Attach (or detach, with None) a fault-injection plan.  Purely
+        host-side: the jitted dispatches are untouched, so a shared
+        compiled engine can flip plans between test runs."""
+        self._faults = plan
+
+    def _dispatch(self, site: str, fn, *args, **kwargs):
+        """Issue one jitted dispatch with bounded retry-with-backoff on
+        transient failures.
+
+        Injected faults raise *before* ``fn`` is invoked, so a failed
+        attempt never consumes donated buffers — retrying with the
+        same arguments is always sound.  (A genuinely transient error
+        raised from inside a donating dispatch would leave the cache
+        consumed; such errors surface as DispatchFailedError on the
+        next attempt and the scheduler's drain path rebuilds.)  The
+        retry loop is bounded by ``retry_limit`` — see the
+        ``no-unbounded-retry`` lint rule.
+        """
+        last: Optional[BaseException] = None
+        for attempt in range(self.retry_limit):
+            if attempt:
+                self.retries += 1
+                if self.retry_backoff_s:
+                    time.sleep(self.retry_backoff_s * (1 << (attempt - 1)))
+            try:
+                if self._faults is not None \
+                        and self._faults.dispatch_error(site):
+                    raise R.InjectedFault(
+                        f"injected transient {site} failure")
+                return fn(*args, **kwargs)
+            except R.TransientDispatchError as e:
+                last = e
+        raise R.DispatchFailedError(
+            f"{site} dispatch still failing after {self.retry_limit} "
+            "attempts") from last
+
     # -- slot management -----------------------------------------------------
     def free_slots(self) -> List[int]:
         return [i for i in range(self.B) if self.phase[i] == FREE]
@@ -426,6 +539,12 @@ class Engine:
         free = self.free_slots()
         if not free:
             raise RuntimeError("no free slot")
+        if self._faults is not None and self._faults.admission_race():
+            # simulated concurrent admitter claimed the lane between
+            # the free check and registration: same transient
+            # RuntimeError a genuinely full engine raises, so the
+            # scheduler requeues and retries at the next boundary.
+            raise RuntimeError("no free slot (injected admission race)")
         L = len(req.prompt)
         if L > self.max_prefill:
             raise ValueError(
@@ -458,6 +577,8 @@ class Engine:
                 self._queue_op(slot, pool.OP_RESET)
             else:
                 self._pending_reset[slot] = True
+        self._admit_seq += 1
+        self.lane_seq[slot] = self._admit_seq
         self.slot_req[slot] = req
         self.phase[slot] = PREFILL
         self.prefill_pos[slot] = keep
@@ -608,10 +729,291 @@ class Engine:
         if self.prefix_caching:
             self._park_lane(slot, req)
         req.done = True
+        if req.status is None:
+            req.status = R.PREEMPTED_RESUMED if req.preempted else R.OK
         self.slot_req[slot] = None
         self.phase[slot] = FREE
         self.active[slot] = False
         return req
+
+    def _fail_lane(self, slot: int, status: str) -> Request:
+        """Quarantine ``slot``: terminal-fail its request and recycle
+        the lane WITHOUT parking anything (its pages may hold poisoned
+        bytes), dropping any parked claims it carried.  The other
+        lanes are untouched — lane math is elementwise on the lane
+        axis, so a poisoned lane cannot corrupt the batch."""
+        req = self.slot_req[slot]
+        if status == R.FAILED_NAN:
+            self.nan_quarantines += 1
+            if self.cfg.has_attention and self.chunked_prefill:
+                # the lane's pages really may hold NaN/Inf bytes, and
+                # the metadata-only reset leaves payload in place —
+                # scrub it, or the next request recycled onto this
+                # lane inherits the poison through masked reductions.
+                mask = np.zeros(self.B, bool)
+                mask[slot] = True
+                self.cache = self._scrub_fn(self.cache, self._dev(mask))
+        if self.prefix_caching:
+            self._drop_parked(slot)
+            self._queue_op(slot, pool.OP_RESET)
+        else:
+            self._pending_reset[slot] = True
+        req.done = True
+        req.status = status
+        self.slot_req[slot] = None
+        self.phase[slot] = FREE
+        self.active[slot] = False
+        return req
+
+    def _lose_lane(self, slot: int) -> Optional[Request]:
+        """Simulated lane loss (FaultPlan): the lane's device state is
+        declared gone mid-flight.  With no checkpoint to restore from,
+        recovery is replay: emitted output is discarded (counted in
+        ``tokens_discarded``) and the request re-admitted through the
+        normal path — greedy decode regenerates the same tokens, so
+        the replayed output is byte-identical to the lost run's.
+        Returns the request only if replay admission was raced out and
+        it had to be failed terminally (the caller reports it done)."""
+        req = self.slot_req[slot]
+        if req is None:
+            return None
+        self.lane_losses += 1
+        self.tokens_discarded += len(req.output)
+        if self.prefix_caching:
+            self._drop_parked(slot)
+            self._queue_op(slot, pool.OP_RESET)
+        else:
+            self._pending_reset[slot] = True
+        self.slot_req[slot] = None
+        self.phase[slot] = FREE
+        self.active[slot] = False
+        self.n_emitted[slot] = 0
+        req.output.clear()
+        req.preempted = True
+        # re-admit onto the freed lane; an injected admission race can
+        # steal it a bounded number of times before the request is
+        # failed terminally rather than stranded without a status.
+        for _ in range(4):
+            try:
+                self.admit(req)
+                return None
+            except RuntimeError:
+                continue
+        req.done = True
+        req.status = R.FAILED_DISPATCH
+        return req
+
+    # -- lane checkpoint / restore (preemption + crash recovery) --------------
+    def flush_pending(self) -> None:
+        """Apply deferred lane resets and pool transitions NOW.  They
+        are normally batched into the next prefill step; checkpoint/
+        restore, the refcount audit and the abort path need the device
+        state current before they read or overwrite it."""
+        if self.prefix_caching:
+            self._flush_pool_ops()
+        if self._pending_reset.any():
+            self.cache = self._reset_fn(
+                self.cache, self._dev(self._pending_reset))
+            self._pending_reset[:] = False
+
+    def checkpoint_lane(self, slot: int) -> R.LaneCheckpoint:
+        """Snapshot lane ``slot``'s complete serving state to host and
+        free the lane.
+
+        One snapshot dispatch, one device->host transfer: the lane's
+        pages, representative keys and slot metadata (as PagedCache
+        rows per attention block) plus the engine's per-lane progress
+        mirrors.  The lane is then released *through the pool*, so
+        slots the prefix index claims stay parked for future mounts —
+        only the preempted request's own claims drop.  Restore with
+        :meth:`restore_lane` onto any free lane, later and elsewhere.
+
+        Only DECODE-phase lanes checkpoint: a mid-prefill lane may
+        have mount/clone ops still queued against it — let its prefill
+        chunk land first (lane loss, by contrast, replays from
+        scratch and handles any phase)."""
+        if self._snapshot_fn is None:
+            raise NotImplementedError(
+                "lane checkpoint/restore rides the chunked-prefill "
+                "attention path; SSM / MoE / multi-codebook archs "
+                "have engine state outside the paged cache")
+        req = self.slot_req[slot]
+        if req is None or self.phase[slot] != DECODE:
+            raise ValueError(
+                f"lane {slot} is not in decode (phase="
+                f"{int(self.phase[slot])}) — only decode-phase lanes "
+                "checkpoint")
+        rows = self._snapshot_fn(self.cache, jnp.int32(slot))
+        rows = jax.tree.map(np.asarray, rows)   # ONE host transfer
+        ckpt = R.LaneCheckpoint(
+            request=req, rows=rows, phase=int(self.phase[slot]),
+            pos=int(self.pos[slot]),
+            prefill_pos=int(self.prefill_pos[slot]),
+            prompt_len=int(self.prompt_len[slot]),
+            last_token=int(self.last_token[slot]),
+            n_emitted=int(self.n_emitted[slot]),
+            eos_id=int(self.eos_id[slot]),
+            max_new=int(self.max_new[slot]),
+            seq=int(self.lane_seq[slot]),
+            n_output=len(req.output))
+        req.preempted = True
+        self.checkpoints += 1
+        # free the lane: the request's claims drop through the pool,
+        # so index-claimed slots stay parked (shared prefixes survive
+        # the preemption); without a pool the lane is plainly reset.
+        if self.prefix_caching:
+            self._queue_op(slot, pool.OP_RELEASE)
+        else:
+            self._pending_reset[slot] = True
+        self.slot_req[slot] = None
+        self.phase[slot] = FREE
+        self.active[slot] = False
+        return ckpt
+
+    def restore_lane(self, ckpt: R.LaneCheckpoint,
+                     slot: Optional[int] = None) -> int:
+        """Restore a checkpointed lane onto ``slot`` (default: any
+        free lane) and resume decoding byte-identically.
+
+        One restore dispatch overwrites every cache row of the target
+        lane (parked claims on it are dropped first) with the
+        checkpoint's rows; the refcount is re-stamped to the restored
+        request's single claim (see ``page_pool.restore_lane``).
+        Returns the lane the request resumed on."""
+        if self._restore_fn is None:
+            raise NotImplementedError(
+                "lane checkpoint/restore rides the chunked-prefill "
+                "attention path")
+        free = self.free_slots()
+        if slot is None:
+            if not free:
+                raise RuntimeError("no free slot to restore into")
+            slot = self._pick_lane(free)
+        elif self.phase[slot] != FREE:
+            raise ValueError(f"lane {slot} is not free")
+        req = ckpt.request
+        if req.done or len(req.output) != ckpt.n_output:
+            raise ValueError(
+                f"stale checkpoint for uid={req.uid}: the request "
+                "advanced or finished since it was taken")
+        if self.prefix_caching:
+            self._drop_parked(slot)
+        # apply queued transitions (the checkpoint's own RELEASE may
+        # still be pending) and lane resets before overwriting rows —
+        # a reset queued against this lane must not wipe the restore.
+        self.flush_pending()
+        self.cache = self._restore_fn(self.cache, jnp.int32(slot),
+                                      ckpt.rows)
+        self.restores += 1
+        self._admit_seq += 1                 # monotone counter reuse
+        self.lane_seq[slot] = ckpt.seq       # keep the original age
+        self.slot_req[slot] = req
+        self.phase[slot] = ckpt.phase
+        self.pos[slot] = ckpt.pos
+        self.prefill_pos[slot] = ckpt.prefill_pos
+        self.prompt_len[slot] = ckpt.prompt_len
+        self.last_token[slot] = ckpt.last_token
+        self.n_emitted[slot] = ckpt.n_emitted
+        self.eos_id[slot] = ckpt.eos_id
+        self.max_new[slot] = ckpt.max_new
+        self.active[slot] = True
+        return slot
+
+    def preempt_victim(self, min_emitted: int = 1) -> Optional[int]:
+        """The degradation policy's victim: the *youngest* decode lane
+        (most recently admitted) that has emitted at least
+        ``min_emitted`` tokens — preempting the youngest wastes the
+        least progress of the lanes closest to finishing.  None when
+        no lane qualifies (e.g. everything is still mid-prefill)."""
+        best = None
+        for i in range(self.B):
+            if self.phase[i] == DECODE \
+                    and self.n_emitted[i] >= min_emitted \
+                    and (best is None
+                         or self.lane_seq[i] > self.lane_seq[best]):
+                best = i
+        return best
+
+    def abort_in_flight(self,
+                        status: str = R.FAILED_DISPATCH) -> List[Request]:
+        """Drain every occupied lane after a serve-loop failure:
+        terminal-fail the requests (partial output retained), release
+        the lanes and their pool claims, and leave the engine
+        reusable.  If the device path itself is broken (e.g. a
+        donating dispatch died mid-call and consumed the cache), fall
+        back to rebuilding the cache from scratch — parked prefixes
+        are lost with it, but no claim leaks."""
+        aborted: List[Request] = []
+        for slot in range(self.B):
+            req = self.slot_req[slot]
+            if req is None:
+                continue
+            req.done = True
+            req.status = status
+            aborted.append(req)
+            if self.prefix_caching:
+                self._drop_parked(slot)
+                self._queue_op(slot, pool.OP_RESET)
+            else:
+                self._pending_reset[slot] = True
+            self.slot_req[slot] = None
+            self.phase[slot] = FREE
+            self.active[slot] = False
+        try:
+            self.flush_pending()
+        except Exception:
+            # device state is unusable: rebuild fresh.  Not a bare
+            # swallow — the recovery below IS the handler.
+            self.pool = pool.PrefixIndex(self.raas.page_size)
+            self.sessions.clear()
+            self._lane_session = [None] * self.B
+            self._pending_op[:] = pool.OP_NOP
+            self._pending_a0[:] = 0
+            self._pending_a1[:] = 0
+            self._pending_clones.clear()
+            self._pending_reset[:] = False
+            self.cache = self._cache_init()
+        return aborted
+
+    def audit_refcounts(self) -> dict:
+        """Post-drain pool-claim audit: with every lane FREE, a slot's
+        refcount must be exactly 1 on the parked pages the prefix
+        index claims (``[0, covered_pages(lane))``) and 0 everywhere
+        else — anything else is a leaked or lost claim.  Raises
+        ``AssertionError`` with the offending state; returns the
+        parked-claim accounting.  One host transfer."""
+        if (self.phase != FREE).any():
+            raise AssertionError(
+                "refcount audit requires a drained engine (lanes "
+                f"{[i for i in range(self.B) if self.phase[i] != FREE]} "
+                "are still occupied)")
+        if not (self.chunked_prefill and self.cfg.has_attention):
+            return {"skipped": "no paged attention cache to audit"}
+        if not self.prefix_caching:
+            # without a pool nothing parks: finished lanes keep stale
+            # (dead) rows until recycled at admission — reset them all
+            # so the audit's zero-claim expectation is meaningful.
+            self._pending_reset[:] = True
+        self.flush_pending()
+        attn = next(bc.attn for bc in self.cache.per_pos
+                    if bc.attn is not None)
+        rc = np.asarray(attn.refcount)       # [n_periods, B, S] or [B, S]
+        rc = rc.reshape((-1,) + rc.shape[-2:])
+        if not (rc == rc[0]).all():
+            raise AssertionError(
+                "refcount diverged across stacked layers — slot "
+                "metadata must evolve identically everywhere")
+        expect = np.zeros_like(rc[0])
+        for lane in range(self.B):
+            cover = self.pool.covered_pages(lane) \
+                if self.prefix_caching else 0
+            expect[lane, :cover] = 1
+        if not (rc[0] == expect).all():
+            raise AssertionError(
+                f"leaked pool claims — refcounts\n{rc[0]}\n!= parked "
+                f"claims\n{expect}")
+        return {"parked_claims": int(expect.sum()),
+                "lanes_parked": int((expect.sum(axis=1) > 0).sum())}
 
     # -- prefill ---------------------------------------------------------------
     def _start_decode(self, slot: int, nxt: int) -> Optional[Request]:
@@ -678,7 +1080,8 @@ class Engine:
         self._account_prefill_bytes(chunk_lens, ctx_pages)
         # every host mirror goes through _dev: defensive copy (dispatch
         # is async) + lane sharding under a mesh.
-        self.cache, logits = self._prefill_chunk_fn(
+        self.cache, logits = self._dispatch(
+            "prefill_chunk", self._prefill_chunk_fn,
             self.params, self.cache, self._dev(toks),
             self._dev(chunk_lens), self._dev(self.prefill_pos),
             ctx_pages=ctx_pages)
@@ -690,7 +1093,13 @@ class Engine:
             # one batched argmax + one host transfer per dispatch, not
             # one blocking round-trip per completing lane
             first = np.asarray(jnp.argmax(logits, axis=-1))     # [B]
+            fin = np.asarray(jnp.all(jnp.isfinite(logits), axis=-1))
             for i in done_lanes:
+                if not fin[i]:
+                    # poisoned before its first token: quarantine the
+                    # lane, never park the (possibly corrupt) prompt
+                    finished.append(self._fail_lane(i, R.FAILED_NAN))
+                    continue
                 if self.prefix_caching:
                     # the freshly ingested prompt is now shareable
                     self._register_prefix(i)
@@ -773,7 +1182,8 @@ class Engine:
         self.dispatches += 1
         # _dev copies defensively: host mirrors are mutated in place by
         # admission while dispatches may still be in flight.
-        self.cache, out = self._chunk_fn(
+        self.cache, out = self._dispatch(
+            "decode_chunk", self._chunk_fn,
             self.params, self.cache,
             self._dev(self.last_token), self._dev(self.pos),
             self._dev(self.active), self._dev(self.n_emitted),
@@ -781,6 +1191,9 @@ class Engine:
             steps=steps)
         toks = np.asarray(out.tokens)          # [K, B]
         emitted = np.asarray(out.emitted)      # [K, B]
+        # .copy(): the device view is read-only, and the NaN-injection
+        # hook below flips entries of the host-side mask in place.
+        ok = np.asarray(out.ok).copy()         # [K, B]
         self.last_token = np.asarray(out.token).astype(np.int32)
         self.pos = np.asarray(out.pos).astype(np.int32)
         self.n_emitted = np.asarray(out.n_emitted).astype(np.int32)
@@ -790,14 +1203,39 @@ class Engine:
         # all finish mid-chunk doesn't inflate tokens/sec.
         self.tokens_emitted += int(emitted.sum())
         self.steps_executed += int(emitted.any(axis=1).sum())
+        if self._faults is not None:
+            # injected NaN: flip the already-transferred finite mask —
+            # exercises the exact quarantine path real non-finite
+            # logits take, with zero device-side machinery.
+            bad = self._faults.poison_lane(slots)
+            if bad is not None:
+                ok[:, bad] = False
         finished: List[Request] = []
         for slot in slots:
             req = self.slot_req[slot]
+            bad_from = None
             for k in range(steps):
-                if emitted[k, slot]:
-                    req.output.append(int(toks[k, slot]))
-            if not self.active[slot]:
+                if not emitted[k, slot]:
+                    continue
+                if not ok[k, slot]:
+                    bad_from = k
+                    break
+                req.output.append(int(toks[k, slot]))
+            if bad_from is not None:
+                # non-finite logits: every token from the first bad
+                # step on is garbage — discard them and quarantine the
+                # lane instead of letting NaN bytes poison the batch.
+                self.tokens_discarded += int(emitted[bad_from:, slot].sum())
+                finished.append(self._fail_lane(slot, R.FAILED_NAN))
+            elif not self.active[slot]:
                 finished.append(self._finish(slot))
+        if self._faults is not None:
+            live = [i for i in range(self.B) if self.phase[i] != FREE]
+            lost = self._faults.lane_loss(live)
+            if lost is not None:
+                failed = self._lose_lane(lost)
+                if failed is not None:
+                    finished.append(failed)
         return finished
 
     def step(self) -> List[Request]:

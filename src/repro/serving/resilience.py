@@ -1,0 +1,169 @@
+"""Resilience layer for the serving engine: terminal statuses, lane
+checkpoints, and a deterministic fault-injection harness.
+
+RaaS makes long reasoning decodes cheap per token — which makes lanes
+long-lived, and a production engine must survive a lane being
+preempted, a dispatch failing, or the page pool running dry mid-fleet.
+This module holds the host-side vocabulary for that:
+
+**Terminal statuses** — every :class:`~repro.serving.engine.Request`
+ends in exactly one of :data:`OK`, :data:`REJECTED`,
+:data:`FAILED_NAN`, :data:`FAILED_DISPATCH` or
+:data:`PREEMPTED_RESUMED` (``Request.status``); a request is never
+silently dropped.
+
+**LaneCheckpoint** — the host image of one preempted lane: the cache
+rows from :func:`~repro.core.paged_cache.snapshot_lane` (one
+device->host transfer) plus the engine's per-lane progress mirrors.
+``Engine.checkpoint_lane`` produces one and frees the lane through the
+pool (shared prefix pages stay parked); ``Engine.restore_lane`` writes
+it onto *any* free lane and resumes byte-identically — greedy decode
+plus an elementwise lane axis means lane identity carries no state.
+
+**FaultPlan** — a seeded, self-contained schedule of injected faults,
+consulted by the engine at dispatch boundaries only.  All injection is
+host-side: an injected dispatch error raises *before* the jitted call
+is issued (donated buffers are never consumed by a failed attempt),
+and NaN poisoning flips the already-transferred finite mask — so the
+compiled HLO is identical with a plan attached or not, which the
+host-transfer analysis pass pins down (zero overhead when off).
+``max_consecutive_errors`` is kept below the engine's retry limit and
+``max_faults`` bounds total injections, so every seeded plan's serve
+run provably terminates.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import numpy as np
+
+# terminal request statuses (Request.status)
+OK = "OK"                                # completed normally
+REJECTED = "REJECTED"                    # refused at admission (capacity)
+FAILED_NAN = "FAILED_NAN"                # non-finite logits; lane quarantined
+FAILED_DISPATCH = "FAILED_DISPATCH"      # dispatch failed beyond retry
+PREEMPTED_RESUMED = "PREEMPTED_RESUMED"  # completed, but was preempted
+                                         # (checkpoint/restore or replay)
+TERMINAL_STATUSES = frozenset(
+    {OK, REJECTED, FAILED_NAN, FAILED_DISPATCH, PREEMPTED_RESUMED})
+
+
+class TransientDispatchError(RuntimeError):
+    """A dispatch failure worth retrying (the engine's bounded
+    retry-with-backoff catches exactly this type)."""
+
+
+class InjectedFault(TransientDispatchError):
+    """A fault raised by a :class:`FaultPlan` (always transient)."""
+
+
+class DispatchFailedError(RuntimeError):
+    """A dispatch still failing after the engine's retry budget; the
+    scheduler's drain path turns this into FAILED_DISPATCH statuses."""
+
+
+@dataclasses.dataclass
+class LaneCheckpoint:
+    """Host image of one preempted lane (see module docstring).
+
+    ``rows`` is the engine cache's pytree of per-lane rows — for the
+    chunked attention path, one ``PagedCache`` row container per
+    period-stacked block — already on host as numpy.  The scalar
+    fields mirror the engine's per-lane host state at the checkpoint.
+    """
+
+    request: Any                  # the preempted serving.engine.Request
+    rows: Tuple                   # per-block cache rows (host numpy)
+    phase: int                    # engine phase at checkpoint (DECODE)
+    pos: int
+    prefill_pos: int
+    prompt_len: int
+    last_token: int
+    n_emitted: int
+    eos_id: int
+    max_new: int
+    seq: int                      # admission sequence (age ordering)
+    n_output: int                 # len(request.output) when taken —
+                                  # restore rejects a stale checkpoint
+
+
+@dataclasses.dataclass
+class FaultPlan:
+    """Deterministic seeded fault schedule for the serving engine.
+
+    Each probability gates one injection point; draws come from a
+    private ``numpy`` generator seeded with ``seed``, consumed in
+    engine call order — single-threaded serving makes the whole
+    schedule a pure function of (seed, workload).
+
+    Termination guarantees baked in: at most
+    ``max_consecutive_errors`` dispatch errors in a row (keep it below
+    the engine's ``retry_limit`` so an injected transient always
+    clears within the retry budget), and at most ``max_faults`` total
+    injections of any kind, after which the plan goes quiet.
+    """
+
+    seed: int
+    p_dispatch_error: float = 0.0   # transient failure per dispatch attempt
+    p_nan: float = 0.0              # poison one decode lane per chunk
+    p_lane_loss: float = 0.0        # lose one live lane per chunk boundary
+    p_admission_race: float = 0.0   # admission loses its lane to a racer
+    max_consecutive_errors: int = 2
+    max_faults: int = 32
+
+    def __post_init__(self) -> None:
+        for name in ("p_dispatch_error", "p_nan", "p_lane_loss",
+                     "p_admission_race"):
+            p = getattr(self, name)
+            if not 0.0 <= p <= 1.0:
+                raise ValueError(f"{name}={p} is not a probability")
+        if self.max_consecutive_errors < 0:
+            raise ValueError("max_consecutive_errors must be >= 0")
+        if self.max_faults < 0:
+            raise ValueError("max_faults must be >= 0")
+        self._rng = np.random.default_rng(self.seed)
+        self._consecutive = 0
+        # per-kind injection counts (tests assert faults really fired)
+        self.injected: Dict[str, int] = {
+            "dispatch_error": 0, "nan": 0, "lane_loss": 0,
+            "admission_race": 0}
+
+    def _fire(self, kind: str, p: float) -> bool:
+        if p <= 0.0 or sum(self.injected.values()) >= self.max_faults:
+            return False
+        hit = bool(self._rng.random() < p)
+        if hit:
+            self.injected[kind] += 1
+        return hit
+
+    def dispatch_error(self, site: str) -> bool:
+        """Should this dispatch attempt fail?  ``site`` names the
+        dispatch kind (telemetry only; the draw stream is shared)."""
+        del site
+        if self._consecutive >= self.max_consecutive_errors:
+            self._consecutive = 0
+            return False
+        hit = self._fire("dispatch_error", self.p_dispatch_error)
+        self._consecutive = self._consecutive + 1 if hit else 0
+        return hit
+
+    def poison_lane(self, lanes: Sequence[int]) -> Optional[int]:
+        """Lane whose decode logits this chunk should read as
+        non-finite (None = no injection)."""
+        if not lanes or not self._fire("nan", self.p_nan):
+            return None
+        return int(lanes[int(self._rng.integers(len(lanes)))])
+
+    def lane_loss(self, lanes: Sequence[int]) -> Optional[int]:
+        """Live lane to declare lost at this chunk boundary (its device
+        state is treated as gone; the engine replays the request)."""
+        if not lanes or not self._fire("lane_loss", self.p_lane_loss):
+            return None
+        return int(lanes[int(self._rng.integers(len(lanes)))])
+
+    def admission_race(self) -> bool:
+        """Should this admission lose its chosen lane to a simulated
+        concurrent admitter?  (Raised as the same transient
+        RuntimeError a genuinely full engine produces.)"""
+        return self._fire("admission_race", self.p_admission_race)

@@ -39,35 +39,100 @@ axis, the exact same output bytes — as the single-device engine.
 Invariants (FIFO admission order, lane capacity never exceeded, exact
 ``tokens_emitted`` accounting) are property-tested in
 tests/test_scheduler_property.py.
+
+Resilience (:mod:`repro.serving.resilience`): a request the engine
+rejects at admission gets a terminal ``REJECTED`` status instead of
+crashing the whole fleet; a transient admission race requeues and
+retries at the next boundary; and **graceful degradation** — when
+admission starves for ``preempt_after`` consecutive chunk boundaries
+(page-pool pressure: every lane busy with a long decode), the youngest
+long decode is checkpointed to host, its lane recycled for the queue,
+and the checkpoint restored (FIFO) once pressure clears.  Any raise
+escaping the loop drains the in-flight lanes through
+``Engine.abort_in_flight`` (terminal FAILED_DISPATCH statuses, pool
+claims released, refcount audit run) before propagating — an exception
+never leaves lanes leaked or the engine unusable.
 """
 from __future__ import annotations
 
 from collections import deque
 from typing import Iterable, List, Optional
 
+from repro.serving import resilience as R
 from repro.serving.engine import Engine, Request
 
 
 def serve(engine: Engine, requests: Iterable[Request],
           max_steps: int = 100_000,
-          chunk_steps: Optional[int] = None) -> List[Request]:
+          chunk_steps: Optional[int] = None,
+          preempt_after: Optional[int] = None) -> List[Request]:
     """Run ``requests`` to completion.  ``max_steps`` bounds the total
     number of decode scan steps actually executed (``steps_executed``
     delta — exact, not dispatches x chunk); ``chunk_steps`` overrides
-    the engine's decode chunk length."""
+    the engine's decode chunk length; ``preempt_after`` overrides
+    ``ServeConfig.preempt_after`` (consecutive starved boundaries
+    before a long decode is checkpointed to host; 0 = never)."""
     queue = deque(requests)
     done: List[Request] = []
+    ckpts: List = []          # preempted checkpoints awaiting restore
     steps_issued = 0
+    starved = 0
     chunk = engine.chunk_steps if chunk_steps is None else chunk_steps
     if chunk < 1:
         raise ValueError("chunk_steps must be positive")
-    while queue or engine.has_active():
-        while queue and engine.free_slots():
-            engine.admit(queue.popleft())
-        done.extend(engine.prefill_step())
-        if steps_issued >= max_steps:
-            break
-        s0 = engine.steps_executed
-        done.extend(engine.step_chunk(chunk_steps))
-        steps_issued += engine.steps_executed - s0
+    if preempt_after is None:
+        preempt_after = engine.serve_cfg.preempt_after
+    try:
+        while queue or ckpts or engine.has_active():
+            admitted = False
+            while queue and engine.free_slots():
+                req = queue[0]
+                try:
+                    engine.admit(req)
+                except ValueError:
+                    # permanent: capacity / validation — terminal
+                    # status, the request never occupies a lane
+                    queue.popleft()
+                    req.done = True
+                    req.status = R.REJECTED
+                    done.append(req)
+                    continue
+                except RuntimeError:
+                    # transient (admission race): retry next boundary
+                    break
+                queue.popleft()
+                admitted = True
+            # graceful degradation: starving = a boundary where the
+            # queue head could not be admitted at all
+            if queue and not admitted and not engine.free_slots():
+                starved += 1
+            else:
+                starved = 0
+            if preempt_after and starved >= preempt_after:
+                victim = engine.preempt_victim()
+                if victim is not None:
+                    ckpts.append(engine.checkpoint_lane(victim))
+                    starved = 0
+                    continue    # admit into the freed lane first
+            # pressure cleared: restore parked checkpoints FIFO into
+            # lanes the queue no longer needs
+            while ckpts and not queue and engine.free_slots():
+                engine.restore_lane(ckpts.pop(0))
+            done.extend(engine.prefill_step())
+            if steps_issued >= max_steps:
+                break
+            s0 = engine.steps_executed
+            done.extend(engine.step_chunk(chunk_steps))
+            steps_issued += engine.steps_executed - s0
+    except Exception:
+        # never leak lanes or pool claims behind a raise: fail the
+        # in-flight and checkpointed requests terminally, release
+        # their claims, audit, and re-raise the original error.
+        done.extend(engine.abort_in_flight())
+        for ck in ckpts:
+            ck.request.done = True
+            ck.request.status = R.FAILED_DISPATCH
+            done.append(ck.request)
+        engine.audit_refcounts()
+        raise
     return done

@@ -1,0 +1,17 @@
+"""Fixture: bare ``except:`` in serving code.
+
+A dispatch failure caught by a bare except never reaches a terminal
+request status — the lint must flag it.  Exactly one finding.
+"""
+
+
+def fn():
+    raise RuntimeError("boom")
+
+
+def drive():
+    try:
+        fn()
+    except:  # FIRE
+        return None
+    return 1

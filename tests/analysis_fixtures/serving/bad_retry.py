@@ -1,0 +1,17 @@
+"""Fixture: unbounded retry loop in serving code.
+
+``while True:`` wrapped around a try/except retry is a livelock when
+the fault is permanent — the lint must flag it.  Exactly one finding.
+"""
+
+
+def fn():
+    raise ValueError("transient?")
+
+
+def drive():
+    while True:  # FIRE
+        try:
+            return fn()
+        except ValueError:
+            continue

@@ -48,6 +48,8 @@ def _fire_line(path: Path) -> int:
     ("bad_paged_gather.py", "paged-gather-outside-kernels"),
     ("core/policies/bad_policy.py", "policy-imports"),
     ("serving/bad_refcount.py", "pool-refcount-outside-pool"),
+    ("serving/bad_bare_except.py", "no-bare-except-in-serving"),
+    ("serving/bad_retry.py", "no-unbounded-retry"),
 ])
 def test_violation_fixture_fires_exactly_once(rel, rule):
     path = FIXTURES / rel

@@ -1,0 +1,357 @@
+"""Preemption, fault injection and graceful degradation.
+
+The resilience contract (repro.serving.resilience):
+
+  * ``checkpoint_lane`` / ``restore_lane`` round-trip a mid-decode
+    lane through host memory and resume **byte-identically**, even
+    onto a different lane — including a lane whose prompt was mounted
+    from the shared prefix index;
+  * every seeded :class:`FaultPlan` serve run terminates with every
+    request carrying exactly one terminal status, all lanes FREE,
+    exact token accounting (emitted == surviving outputs + discarded)
+    and zero leaked pool claims (``audit_refcounts``);
+  * injected dispatch errors raise *before* the jitted call, so the
+    bounded retry path replays to byte parity; exhausting the retry
+    budget drains cleanly through ``abort_in_flight`` and leaves the
+    engine reusable;
+  * the scheduler's degradation policy really checkpoints a long
+    decode under admission starvation and restores it unchanged;
+  * attaching a plan never touches the compiled dispatches (no host
+    transfers appear — the harness is zero-overhead when off).
+
+One engine is shared across tests (same pattern as
+tests/test_scheduler_property.py) so the chunk functions compile once.
+Every test leaves the engine drained and audited.
+"""
+import copy
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis import hlo as H
+from repro.config import ModelConfig, RaasConfig
+from repro.models import model as M
+from repro.serving import resilience as R
+from repro.serving.engine import DECODE, FREE, PREFILL, Engine, Request
+from repro.serving.scheduler import serve
+
+TINY = ModelConfig(name="tiny", arch_type="dense", n_layers=2, d_model=64,
+                   n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=128,
+                   head_dim=16)
+MAX_PREFILL = 32
+
+_ENGINE = None
+
+
+def _engine() -> Engine:
+    global _ENGINE
+    if _ENGINE is None:
+        params = M.init_params(jax.random.PRNGKey(0), TINY)
+        raas = RaasConfig(policy="raas", budget_tokens=64, page_size=4)
+        _ENGINE = Engine(params, TINY, raas, batch_slots=3, max_seq=64,
+                         max_prefill=MAX_PREFILL, prefill_chunk=8,
+                         chunk_steps=4)
+    return _ENGINE
+
+
+def _reqs(specs, seed=0):
+    """Fresh Request objects from (plen, max_new[, eos]) specs; the
+    seeded rng makes prompts identical across parity runs."""
+    rng = np.random.default_rng(seed)
+    out = []
+    for i, spec in enumerate(specs):
+        plen, max_new, eos = (spec + (None,))[:3]
+        out.append(Request(
+            uid=i, prompt=rng.integers(0, TINY.vocab_size,
+                                       size=plen).astype(np.int32),
+            max_new_tokens=max_new, eos_id=eos))
+    return out
+
+
+def _to_decode(eng, req):
+    """Admit ``req`` and pump prefill until its lane decodes; returns
+    the lane."""
+    eng.admit(req)
+    slot = eng.slot_req.index(req)
+    while eng.phase[slot] == PREFILL:
+        assert not eng.prefill_step(), "request finished during prefill"
+    assert eng.phase[slot] == DECODE
+    return slot
+
+
+def _drain(eng):
+    done = []
+    while eng.has_active():
+        done.extend(eng.prefill_step())
+        done.extend(eng.step_chunk())
+    return done
+
+
+def _assert_drained(eng):
+    assert all(p == FREE for p in eng.phase)
+    assert all(r is None for r in eng.slot_req)
+    eng.audit_refcounts()
+
+
+# ---------------------------------------------------------------------------
+# checkpoint / restore parity
+# ---------------------------------------------------------------------------
+def test_checkpoint_restore_different_lane_byte_parity():
+    eng = _engine()
+    (base,) = serve(eng, _reqs([(6, 12)], seed=11))
+    assert base.status == R.OK and len(base.output) > 1
+
+    ck0, rs0 = eng.checkpoints, eng.restores
+    (req,) = _reqs([(6, 12)], seed=11)
+    slot = _to_decode(eng, req)
+    eng.step_chunk()                      # some decode progress first
+    assert not req.done
+    ckpt = eng.checkpoint_lane(slot)
+    assert eng.phase[slot] == FREE and eng.slot_req[slot] is None
+    assert not eng.has_active()           # fully off-device
+    assert isinstance(np.asarray(jax.tree.leaves(ckpt.rows)[0]),
+                      np.ndarray)
+
+    other = (slot + 1) % eng.B
+    assert eng.restore_lane(ckpt, other) == other
+    done = _drain(eng)
+    assert done == [req] and req.done
+    assert req.status == R.PREEMPTED_RESUMED
+    assert req.output == base.output, "restore broke byte parity"
+    assert (eng.checkpoints, eng.restores) == (ck0 + 1, rs0 + 1)
+    _assert_drained(eng)
+
+
+def test_checkpoint_restore_with_mounted_prefix_parity():
+    """The preempted lane's prompt was zero-copy mounted from the
+    prefix index; its release must keep the donor pages parked, and
+    the restored run must still match the uninterrupted one."""
+    eng = _engine()
+    # park a prompt, then serve the same prompt once uninterrupted
+    (a,) = serve(eng, _reqs([(8, 3)], seed=21))
+    assert a.status == R.OK
+    m0 = eng.prefix_mounts
+    (base,) = serve(eng, _reqs([(8, 10)], seed=21))
+    assert eng.prefix_mounts > m0, "prompt did not mount from the pool"
+
+    (req,) = _reqs([(8, 10)], seed=21)
+    slot = _to_decode(eng, req)
+    eng.step_chunk()
+    ckpt = eng.checkpoint_lane(slot)
+    # the shared prefix survives the preemption: still parked + indexed
+    assert eng.pool.covered_pages(slot) > 0
+    other = (slot + 1) % eng.B
+    eng.restore_lane(ckpt, other)
+    _drain(eng)
+    assert req.status == R.PREEMPTED_RESUMED
+    assert req.output == base.output
+    _assert_drained(eng)
+
+
+def test_checkpoint_api_validation():
+    eng = _engine()
+    with pytest.raises(ValueError, match="not in decode"):
+        eng.checkpoint_lane(0)            # free lane
+    (req,) = _reqs([(20, 4)], seed=31)
+    eng.admit(req)
+    slot = eng.slot_req.index(req)
+    eng.prefill_step()                    # 8 of 20 tokens: mid-prefill
+    assert eng.phase[slot] == PREFILL
+    with pytest.raises(ValueError, match="not in decode"):
+        eng.checkpoint_lane(slot)
+    while eng.phase[slot] == PREFILL:
+        eng.prefill_step()
+    ckpt = eng.checkpoint_lane(slot)
+    eng.restore_lane(ckpt)
+    _drain(eng)
+    assert req.done and req.status == R.PREEMPTED_RESUMED
+    with pytest.raises(ValueError, match="stale checkpoint"):
+        eng.restore_lane(ckpt)            # request already finished
+    _assert_drained(eng)
+
+
+# ---------------------------------------------------------------------------
+# fault injection
+# ---------------------------------------------------------------------------
+def test_fault_plan_seeds_terminate_clean():
+    """Every seeded plan terminates with terminal statuses everywhere,
+    a drained engine, exact token accounting and zero leaked claims."""
+    eng = _engine()
+    specs = [(3, 5), (20, 8, 7), (9, 12), (5, 2, 7), (14, 6), (7, 9)]
+    total_injected = 0
+    for seed in range(8):
+        plan = R.FaultPlan(seed=seed, p_dispatch_error=0.25, p_nan=0.15,
+                           p_lane_loss=0.1, p_admission_race=0.25,
+                           max_faults=10)
+        reqs = _reqs(specs, seed=100 + seed)
+        e0 = eng.tokens_emitted
+        d0 = eng.tokens_discarded
+        eng.set_faults(plan)
+        try:
+            done = serve(eng, reqs, preempt_after=2)
+        finally:
+            eng.set_faults(None)
+        total_injected += sum(plan.injected.values())
+        assert sorted(r.uid for r in done) == list(range(len(specs)))
+        for r in done:
+            assert r.done and r.status in R.TERMINAL_STATUSES, \
+                (seed, r.uid, r.status)
+        assert eng.tokens_emitted - e0 \
+            == sum(len(r.output) for r in done) \
+            + (eng.tokens_discarded - d0), f"seed {seed} lost tokens"
+        _assert_drained(eng)
+    assert total_injected > 0, "no fault ever fired across 8 seeds"
+
+
+def test_device_nan_quarantines_one_lane():
+    """Real non-finite bytes in one lane's pages trip the on-device
+    finite mask: that lane is quarantined (FAILED_NAN, poisoned tokens
+    discarded) while its batch neighbor decodes on to byte parity."""
+    eng = _engine()
+    (base,) = serve(eng, _reqs([(5, 8)], seed=41))
+
+    bad, good = _reqs([(6, 8), (5, 8)], seed=41)
+    bad.uid, good.uid = 100, 0            # keep prompts: good == base
+    good.prompt = base.prompt
+    nq0, e0, d0 = eng.nan_quarantines, eng.tokens_emitted, \
+        eng.tokens_discarded
+    slot_b = _to_decode(eng, bad)
+    slot_g = _to_decode(eng, good)
+
+    def poison(cache, lane):
+        per = []
+        for bc in cache.per_pos:
+            attn = bc.attn
+            if attn is not None:
+                attn = attn._replace(
+                    k_pages=attn.k_pages.at[:, lane].set(jnp.nan),
+                    v_pages=attn.v_pages.at[:, lane].set(jnp.nan))
+            per.append(bc._replace(attn=attn))
+        return cache._replace(per_pos=tuple(per))
+
+    eng.cache = poison(eng.cache, slot_b)
+    done = _drain(eng)
+    assert {r.uid for r in done} == {100, 0}
+    assert bad.status == R.FAILED_NAN
+    assert eng.nan_quarantines == nq0 + 1
+    assert eng.tokens_discarded > d0, "poisoned tokens were kept"
+    assert good.status == R.OK
+    assert good.output == base.output, "quarantine leaked into the batch"
+    assert eng.tokens_emitted - e0 == len(bad.output) + len(good.output) \
+        + (eng.tokens_discarded - d0)
+    _assert_drained(eng)
+    # quarantine scrubbed the payload: fresh requests filling EVERY
+    # lane (including the poisoned one) decode clean — the
+    # metadata-only reset alone would let them inherit the NaN bytes
+    again = serve(eng, _reqs([(4, 6), (6, 6), (8, 6)], seed=43))
+    assert all(r.status == R.OK and len(r.output) > 0 for r in again)
+    _assert_drained(eng)
+
+
+def test_injected_dispatch_errors_retry_to_parity():
+    """p=1.0 transient errors with max_consecutive_errors below the
+    retry limit: every dispatch eventually lands and the run is
+    byte-identical to the fault-free one."""
+    eng = _engine()
+    specs = [(3, 6), (12, 4, 7), (9, 8)]
+    base = {r.uid: list(r.output) for r in serve(eng, _reqs(specs, seed=51))}
+    plan = R.FaultPlan(seed=3, p_dispatch_error=1.0,
+                       max_consecutive_errors=2, max_faults=10_000)
+    r0 = eng.retries
+    eng.set_faults(plan)
+    try:
+        done = serve(eng, _reqs(specs, seed=51))
+    finally:
+        eng.set_faults(None)
+    assert plan.injected["dispatch_error"] > 0 and eng.retries > r0
+    assert all(r.status == R.OK for r in done)
+    assert {r.uid: list(r.output) for r in done} == base, \
+        "retry replay broke byte parity"
+    _assert_drained(eng)
+
+
+def test_retry_exhaustion_drains_clean_and_engine_survives():
+    """Errors outlasting the retry budget surface as
+    DispatchFailedError; the scheduler's drain path terminal-fails the
+    in-flight requests, leaks nothing, and the engine serves again."""
+    eng = _engine()
+    plan = R.FaultPlan(seed=7, p_dispatch_error=1.0,
+                       max_consecutive_errors=10, max_faults=10_000)
+    reqs = _reqs([(4, 5), (6, 3)], seed=61)
+    eng.set_faults(plan)
+    try:
+        with pytest.raises(R.DispatchFailedError):
+            serve(eng, reqs)
+    finally:
+        eng.set_faults(None)
+    for r in reqs:
+        assert r.done and r.status == R.FAILED_DISPATCH
+    _assert_drained(eng)
+    # the engine is still serviceable after the failure drain
+    (again,) = serve(eng, _reqs([(4, 5)], seed=61))
+    assert again.status == R.OK and len(again.output) > 0
+    _assert_drained(eng)
+
+
+# ---------------------------------------------------------------------------
+# scheduler: rejection + graceful degradation
+# ---------------------------------------------------------------------------
+def test_rejected_request_gets_terminal_status():
+    eng = _engine()
+    good, too_long = _reqs([(5, 3), (MAX_PREFILL + 8, 3)], seed=71)
+    done = serve(eng, [too_long, good])
+    assert too_long.done and too_long.status == R.REJECTED
+    assert too_long.output == []
+    assert good.status == R.OK and len(done) == 2
+    _assert_drained(eng)
+
+
+def test_degradation_preempts_long_decode_under_pressure():
+    """More requests than lanes, every lane stuck in a long decode:
+    after ``preempt_after`` starved boundaries the scheduler must
+    checkpoint the youngest long decode, admit the queue, restore when
+    pressure clears — and change no output bytes."""
+    eng = _engine()
+    specs = [(4, 20), (5, 20), (6, 20), (3, 2), (4, 2)]
+    base = {r.uid: list(r.output)
+            for r in serve(eng, _reqs(specs, seed=81), preempt_after=0)}
+    ck0, rs0 = eng.checkpoints, eng.restores
+    done = serve(eng, _reqs(specs, seed=81), preempt_after=2)
+    assert eng.checkpoints > ck0, "pressure never triggered a preemption"
+    assert eng.restores > rs0, "checkpoint was never restored"
+    assert {r.uid: list(r.output) for r in done} == base, \
+        "preemption changed output bytes"
+    statuses = {r.uid: r.status for r in done}
+    assert set(statuses.values()) <= {R.OK, R.PREEMPTED_RESUMED}
+    assert R.PREEMPTED_RESUMED in statuses.values()
+    _assert_drained(eng)
+
+
+# ---------------------------------------------------------------------------
+# zero overhead when off
+# ---------------------------------------------------------------------------
+def test_fault_hooks_leave_dispatch_hlo_clean():
+    """A FaultPlan is consulted strictly host-side: with a plan
+    attached, the compiled decode dispatch still contains no host
+    transfers and still donates the cache."""
+    eng = _engine()
+    eng.set_faults(R.FaultPlan(seed=0, p_dispatch_error=0.5, p_nan=0.5))
+    try:
+        lowered = eng._chunk_fn.lower(
+            jax.tree.map(lambda x: jax.ShapeDtypeStruct(jnp.shape(x),
+                                                        x.dtype),
+                         eng.params),
+            jax.tree.map(lambda x: jax.ShapeDtypeStruct(jnp.shape(x),
+                                                        x.dtype),
+                         eng.cache),
+            *([jax.ShapeDtypeStruct((eng.B,), jnp.int32)] * 2),
+            jax.ShapeDtypeStruct((eng.B,), jnp.bool_),
+            *([jax.ShapeDtypeStruct((eng.B,), jnp.int32)] * 3),
+            steps=eng.chunk_steps)
+        txt = lowered.compile().as_text()
+    finally:
+        eng.set_faults(None)
+    assert H.host_transfer_findings(txt, label="decode_chunk") == []
+    assert "input_output_alias" in txt, "cache donation disappeared"

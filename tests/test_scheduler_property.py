@@ -52,6 +52,7 @@ import jax
 
 from repro.config import ModelConfig, RaasConfig
 from repro.models import model as M
+from repro.serving import resilience as R
 from repro.serving.engine import FREE, Engine, Request
 from repro.serving.scheduler import serve
 
@@ -118,10 +119,52 @@ def _check_invariants(reqs_spec):
     # exact accounting: device-side emitted mask == host-side outputs
     assert eng.tokens_emitted - emitted_before \
         == sum(len(r.output) for r in done)
+    # a fault-free serve ends every request OK — never a silent None
+    assert all(r.status == R.OK for r in done)
     # the engine drained: no lane leaked, no request stranded
     assert all(p == FREE for p in eng.phase)
     assert not eng.has_active() and not eng.has_prefill_pending()
     assert all(r is None for r in eng.slot_req)
+    # ... and no pool claim leaked either (parked prefixes only)
+    eng.audit_refcounts()
+
+
+def _check_fault_invariants(reqs_spec, seed, preempt_after):
+    """Serve under a seeded FaultPlan (+ optional preemption) and
+    assert the resilience contract: every request reaches exactly one
+    terminal status, token accounting stays exact including discarded
+    tokens, and the drained engine leaks neither lanes nor pool
+    claims.  FIFO recording is deliberately not asserted here — lane
+    loss legitimately re-admits a request out of band."""
+    eng = _engine()
+    assert all(p == FREE for p in eng.phase), "engine not idle at entry"
+    rng = np.random.default_rng(4321)
+    reqs = [Request(uid=i,
+                    prompt=rng.integers(0, TINY.vocab_size,
+                                        size=plen).astype(np.int32),
+                    max_new_tokens=max_new,
+                    eos_id=EOS if use_eos else None)
+            for i, (plen, max_new, use_eos) in enumerate(reqs_spec)]
+    plan = R.FaultPlan(seed=seed, p_dispatch_error=0.25, p_nan=0.15,
+                       p_lane_loss=0.1, p_admission_race=0.25,
+                       max_faults=10)
+    e0, d0 = eng.tokens_emitted, eng.tokens_discarded
+    eng.set_faults(plan)
+    try:
+        done = serve(eng, reqs, preempt_after=preempt_after)
+    finally:
+        eng.set_faults(None)
+    # every request terminates exactly once, with a terminal status
+    assert sorted(r.uid for r in done) == list(range(len(reqs)))
+    for r in done:
+        assert r.done and r.status in R.TERMINAL_STATUSES, \
+            (r.uid, r.status)
+    # exact accounting even under faults: emitted == surviving + discarded
+    assert eng.tokens_emitted - e0 \
+        == sum(len(r.output) for r in done) + (eng.tokens_discarded - d0)
+    assert all(p == FREE for p in eng.phase)
+    assert all(r is None for r in eng.slot_req)
+    eng.audit_refcounts()
 
 
 @settings(max_examples=12, deadline=None)
@@ -134,6 +177,19 @@ def test_scheduler_invariants_property(reqs_spec):
     _check_invariants(reqs_spec)
 
 
+@settings(max_examples=8, deadline=None)
+@given(st.lists(
+    st.tuples(st.integers(min_value=1, max_value=MAX_PREFILL),
+              st.integers(min_value=0, max_value=10),
+              st.booleans()),
+    min_size=1, max_size=8),
+    st.integers(min_value=0, max_value=2 ** 16),
+    st.sampled_from([0, 2]))
+def test_scheduler_fault_invariants_property(reqs_spec, seed,
+                                             preempt_after):
+    _check_fault_invariants(reqs_spec, seed, preempt_after)
+
+
 def test_scheduler_invariants_deterministic():
     """Fixed sequence exercising the same invariants (runs even when
     hypothesis is absent): capacity pressure (8 requests, 3 lanes),
@@ -143,3 +199,12 @@ def test_scheduler_invariants_deterministic():
         (1, 1, True), (9, 10, False), (17, 2, True),
         (MAX_PREFILL, 1, False), (5, 7, True),
     ])
+
+
+def test_scheduler_fault_invariants_deterministic():
+    """Fault-plan drain invariants on a fixed workload across fixed
+    seeds (runs even when hypothesis is absent)."""
+    spec = [(3, 5, False), (20, 8, True), (9, 12, False),
+            (5, 2, True), (14, 6, False)]
+    for seed in range(4):
+        _check_fault_invariants(spec, seed=seed, preempt_after=2)

@@ -37,10 +37,11 @@ def test_serving_throughput_smoke():
     assert don["peak_live_bytes"] + don["kv_cache_bytes"] \
         <= don["peak_live_bytes_undonated"]
     assert set(don["per_dispatch"]) \
-        == {"reset", "prefill_chunk", "decode_chunk", "pool_transition"}
+        == {"reset", "prefill_chunk", "decode_chunk", "pool_transition",
+            "lane_restore"}
     # shared-prefix row: the byte-parity assertion runs inside run();
     # here pin the schema and the collapse accounting it exposes
-    assert result["schema"] == "serving/v5-prefix-cache"
+    assert result["schema"] == "serving/v6-preemption"
     sp = result["prefix_cache"]
     assert sp["prefix_caching"] is True
     assert sp["prefix_mounts"] + sp["prefix_clones"] >= 1
@@ -48,6 +49,14 @@ def test_serving_throughput_smoke():
     assert sp["prefill_tokens"] \
         == sp["prefill_tokens_uncached"] - sp["prefix_cached_tokens"]
     assert 0 < sp["prefill_collapse"] < 1
+    # preemption row: byte parity vs the uninterrupted fleet runs
+    # inside run(); here pin that degradation really fired and that
+    # the warm checkpoint/restore microbench produced real timings
+    pre = result["preemption"]
+    assert pre["checkpoints"] >= 1 and pre["restores"] >= 1
+    assert set(pre["statuses"]) <= {"OK", "PREEMPTED_RESUMED"}
+    assert "PREEMPTED_RESUMED" in pre["statuses"]
+    assert pre["checkpoint_s"] > 0 and pre["restore_s"] > 0
 
 
 @pytest.mark.slow

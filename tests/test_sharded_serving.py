@@ -18,7 +18,10 @@ What is pinned down:
   * a 2D ``data=2,model=2`` mesh serves identically with the KV
     head_dim sharded over "model" on top of the lane sharding;
   * the serving-throughput benchmark's sharded row runs its own
-    byte-parity and per-device-bytes assertions.
+    byte-parity and per-device-bytes assertions;
+  * a decode checkpointed from one device's lane and restored onto a
+    different device's lane resumes byte-identically (preemption under
+    the mesh crosses shard boundaries through host rows).
 """
 import pytest
 
@@ -61,3 +64,7 @@ def test_sharded_engine_2d_mesh():
 
 def test_bench_sharded_row():
     run_case("case_bench_sharded_row")
+
+
+def test_sharded_preempt_restore():
+    run_case("case_preempt_restore_sharded")
